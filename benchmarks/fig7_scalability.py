@@ -1,0 +1,71 @@
+"""Paper Fig 7: simulator cost vs MPI rank count on the 10,008-node
+two-level fat-tree (556 edge x 18 core switches).
+
+Paper: 2,000..10,000 ranks at N = 2e7; 21.8 h / 720 MB at the top end
+(SystemC).  Here:
+  * DES path — reduced N (quick mode) showing the same near-linear
+    wall-time and linear memory scaling in rank count;
+  * fastsim path — the FULL paper N=2e7 at every rank count, in seconds
+    (the beyond-paper result).
+"""
+from __future__ import annotations
+
+import gc
+import time
+import tracemalloc
+
+
+def run(quick: bool = True):
+    from repro.core.apps.hpl import HPLConfig, HPLSim
+    from repro.core.fastsim import FastSimParams, simulate_hpl_fast
+    from repro.core.hardware.node import frontera_node
+    from repro.core.hardware.topology import paper_fat_tree
+
+    rows = []
+    node = frontera_node()
+    ranks_list = [512, 1152, 2048] if quick else [2048, 4608, 10000]
+    N_des = 49152 if quick else 98304
+    for ranks in ranks_list:
+        P = int(ranks ** 0.5)
+        while ranks % P:
+            P -= 1
+        Q = ranks // P
+        topo = paper_fat_tree()
+        cfg = HPLConfig(N=N_des, nb=192, P=P, Q=Q)
+        gc.collect()
+        tracemalloc.start()
+        t0 = time.perf_counter()
+        res = HPLSim(cfg, node, topo).run()
+        wall = time.perf_counter() - t0
+        _, peak_mem = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+        rows.append({
+            "name": f"fig7.des_ranks{ranks}",
+            "us_per_call": wall * 1e6,
+            "derived": f"events={res.events};mem_mb={peak_mem/1e6:.0f};"
+                       f"simT={res.time_s:.2f}s;N={N_des}",
+        })
+    # fastsim at the paper's full matrix size
+    for ranks in ([2048, 10000] if quick else [2048, 4608, 10000]):
+        P = int(ranks ** 0.5)
+        while ranks % P:
+            P -= 1
+        Q = ranks // P
+        cfg = HPLConfig(N=20_000_000, nb=384, P=P, Q=Q)
+        prm = FastSimParams.from_node(node, link_bw=100e9 / 8)
+        t0 = time.perf_counter()
+        res = simulate_hpl_fast(cfg, prm)
+        wall = time.perf_counter() - t0
+        rows.append({
+            "name": f"fig7.fastsim_ranks{ranks}_N2e7",
+            "us_per_call": wall * 1e6,
+            "derived": f"simT={res['time_s']/3600:.2f}h;"
+                       f"tflops={res['tflops']:.0f};"
+                       f"paper_systemc=21.8h_sim_wall",
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

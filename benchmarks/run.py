@@ -1,0 +1,54 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints ``name,us_per_call,derived`` CSV (one row per measurement).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    "benchmarks.fig2_dgemm_model",      # Fig 2: DGEMM model fit, R^2
+    "benchmarks.fig56_hpl_accuracy",    # Fig 5/6: measured vs simulated
+    "benchmarks.fig7_scalability",      # Fig 7: sim cost vs rank count
+    "benchmarks.table2_top500",         # Table II: Frontera / PupMaya
+    "benchmarks.sec5_whatif",           # §V: what-if analyses
+    "benchmarks.tpu_predict",           # TPU adaptation table
+    "benchmarks.kernels_bench",         # Pallas kernels
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full-size benchmark configs (slow)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module suffixes")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failed = 0
+    for mod_name in MODULES:
+        if args.only and not any(mod_name.endswith(o)
+                                 for o in args.only.split(",")):
+            continue
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            rows = mod.run(quick=not args.full)
+            for r in rows:
+                print(f"{r['name']},{r['us_per_call']:.2f},"
+                      f"\"{r['derived']}\"", flush=True)
+        except Exception:
+            failed += 1
+            print(f"{mod_name},NaN,\"ERROR\"", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

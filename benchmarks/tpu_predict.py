@@ -1,0 +1,43 @@
+"""TPU adaptation table: SimXLA-predicted step time per (arch x shape x
+mesh) vs the three-term roofline bound from the compiled dry-run —
+the transformer-era Table II."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+
+def run(quick: bool = True):
+    rec_dir = Path("experiments/dryrun")
+    rows = []
+    if not rec_dir.exists():
+        return [{"name": "tpu_predict.skipped", "us_per_call": 0,
+                 "derived": "no dry-run records; run repro.launch.dryrun --all"}]
+    from repro.core.simxla import SimXLA
+    sim = SimXLA()
+    files = sorted(rec_dir.glob("*__16x16.json"))
+    if quick:
+        keep = {"qwen3-moe-235b-a22b", "granite-34b", "mamba2-780m",
+                "qwen2-0.5b"}
+        files = [f for f in files if f.name.split("__")[0] in keep]
+    for f in files:
+        rec = json.loads(f.read_text())
+        if not rec.get("ok"):
+            continue
+        p = sim.predict(rec)
+        bound = rec["roofline"]["bound_s"]
+        mf = rec["roofline"].get("model_flops", 0)
+        mfu = (mf / max(p.step_s, 1e-12)) / (rec["chips"] * 197e12)
+        rows.append({
+            "name": f"tpu.{rec['arch']}.{rec['shape']}",
+            "us_per_call": p.step_s * 1e6,
+            "derived": f"pred={p.step_s:.3g}s;comp={p.compute_s:.3g};"
+                       f"mem={p.memory_s:.3g};coll={p.collective_s:.3g};"
+                       f"mfu={mfu:.3f}",
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

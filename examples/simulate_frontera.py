@@ -1,0 +1,41 @@
+"""Reproduce paper Table II: predict Frontera + PupMaya HPL Rmax from
+public configs, on this laptop-class container, in seconds.
+
+    PYTHONPATH=src python examples/simulate_frontera.py
+"""
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core.apps.hpl import HPLConfig
+from repro.core.fastsim import FastSimParams, simulate_hpl_fast
+from repro.core.hardware.node import frontera_node, pupmaya_node
+
+SYSTEMS = [
+    ("Frontera (#5)", frontera_node(), 9_282_848, (88, 91), 23516, 22566,
+     "4.8 h"),
+    ("PupMaya (#25)", pupmaya_node(), 4_748_928, (59, 72), 7484, 7558,
+     "1.7 h"),
+]
+
+
+def main():
+    print(f"{'system':15s} {'reported':>9s} {'paper sim':>9s} "
+          f"{'our sim':>9s} {'our err':>8s} {'exec':>7s} {'sim wall':>9s}")
+    for name, node, N, (P, Q), reported, paper_pred, paper_wall in SYSTEMS:
+        cfg = HPLConfig(N=N, nb=384, P=P, Q=Q)
+        prm = FastSimParams.from_node(node, link_bw=100e9 / 8)
+        t0 = time.perf_counter()
+        res = simulate_hpl_fast(cfg, prm)
+        wall = time.perf_counter() - t0
+        err = (res["tflops"] - reported) / reported * 100
+        print(f"{name:15s} {reported:8d}T {paper_pred:8d}T "
+              f"{res['tflops']:8.0f}T {err:+7.1f}% "
+              f"{res['time_s']/3600:6.2f}h {wall:8.1f}s"
+              f"   (paper sim wall: {paper_wall})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Paper §V what-if analysis, both worlds:
+
+    PYTHONPATH=src python examples/whatif_analysis.py
+
+HPL: is a 200 Gb/s fabric worth it for Frontera?  (paper: no, +2.6%)
+TPU: which upgrade moves a MoE train step — 2x ICI, 2x HBM, or 2x MXU?
+FT:  should a 3x-slow chip be evicted mid-run?
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core.apps.hpl import HPLConfig
+from repro.core.fastsim import FastSimParams, simulate_hpl_fast
+from repro.core.hardware.node import frontera_node
+
+
+def main():
+    print("== HPL: 100 -> 200 Gb/s fabric (Frontera) ==")
+    cfg = HPLConfig(N=9_282_848, nb=384, P=88, Q=91)
+    node = frontera_node()
+    r100 = simulate_hpl_fast(cfg, FastSimParams.from_node(node,
+                                                          link_bw=100e9 / 8))
+    r200 = simulate_hpl_fast(cfg, FastSimParams.from_node(node,
+                                                          link_bw=200e9 / 8))
+    gain = (r200["tflops"] / r100["tflops"] - 1) * 100
+    print(f"  {r100['tflops']:.0f} -> {r200['tflops']:.0f} TF "
+          f"({gain:+.1f}%) — paper found +2.6%: upgrade not worth it")
+
+    rec = Path("experiments/dryrun/qwen3-moe-235b-a22b__train_4k__16x16.json")
+    if rec.exists():
+        from repro.core.predict import whatif
+        print("== TPU: qwen3-moe-235b train_4k on one v5e pod ==")
+        for name, kw in [("2x ICI", dict(link_bw_scale=2.0)),
+                         ("2x HBM bw", dict(hbm_bw_scale=2.0)),
+                         ("2x MXU peak", dict(peak_scale=2.0))]:
+            w = whatif("qwen3-moe-235b-a22b", "train_4k", **kw)
+            print(f"  {name:12s}: {w['baseline_s']:.2f}s -> "
+                  f"{w['whatif_s']:.2f}s ({w['speedup']:.2f}x)")
+        from repro.ft.straggler import simulate_straggler_impact
+        print("== FT: one 3x-slow chip (qwen2-0.5b train, DES) ==")
+        s = simulate_straggler_impact("qwen2-0.5b", "train_4k",
+                                      slowdown=3.0)
+        print(f"  step {s['baseline_s']:.3f}s -> {s['straggler_s']:.3f}s "
+              f"({s['blowup']:.2f}x) — verdict: {s['verdict']}")
+    else:
+        print("(TPU sections skipped — run repro.launch.dryrun --all first)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""The paper's primary contribution: a full-system performance-prediction
+simulator (hardware layer + library models + application layer on a
+low-overhead DES), plus its JAX-vectorized exascale path and the TPU/XLA
+adaptation.  See DESIGN.md §1-2."""
+from .engine import Engine, Event, Process
+from .simblas import SimBLAS
+from .simmpi import SimMPI
+from .calibrate import calibrate, measure_dgemm, fit_linear
+from .fastsim import FastSimParams, simulate_hpl_fast
+from .simxla import SimXLA, ICIParams, ICI, collective_time
+from .predict import predict_cell, predict_cell_des, whatif, load_record
+
+__all__ = ["Engine", "Event", "Process", "SimBLAS", "SimMPI", "calibrate",
+           "measure_dgemm", "fit_linear", "FastSimParams",
+           "simulate_hpl_fast", "SimXLA", "ICIParams", "ICI",
+           "collective_time", "predict_cell", "predict_cell_des", "whatif",
+           "load_record"]

@@ -1,0 +1,188 @@
+"""HPL application model (paper §III-C) on the discrete-event simulator.
+
+Right-looking LU with block size ``nb`` on a P x Q block-cyclic process
+grid.  Per panel k:
+
+  1. panel factorization (owning process column): per column j of the
+     panel — idamax + pivot allreduce over the P column ranks + dscal +
+     dger over the local rows; pivot exchange is aggregated into one
+     column-group sync + analytic per-column latency (the paper models
+     collectives with algorithm models, not per-packet events).
+  2. panel broadcast along each process row (HPL '1ring' store-and-forward
+     by default, 'long' = scatter+allgather variant available).
+  3. trailing row swaps among the P column ranks (HPL_dlaswp*: modeled as
+     log2(P) exchange rounds of the U strip — bandwidth-bound Level-1 ops
+     per the paper).
+  4. trailing update: dtrsm + dgemm on the local tile.
+
+Matrix data is never allocated (paper: "the content of A is irrelevant
+for the simulation") — only numroc-style shape arithmetic flows.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+from repro.core.engine import Engine
+from repro.core.hardware.network import Network
+from repro.core.hardware.node import NodeModel
+from repro.core.simblas import SimBLAS
+from repro.core.simmpi import SimMPI
+
+
+def numroc(n: int, nb: int, iproc: int, nprocs: int) -> int:
+    """ScaLAPACK NUMROC: local rows/cols of an n-length dim distributed in
+    nb blocks over nprocs, for process iproc (src proc 0)."""
+    nblocks = n // nb
+    base = (nblocks // nprocs) * nb
+    extra = nblocks % nprocs
+    if iproc < extra:
+        base += nb
+    elif iproc == extra:
+        base += n % nb
+    return base
+
+
+@dataclasses.dataclass
+class HPLConfig:
+    N: int
+    nb: int
+    P: int
+    Q: int
+    bcast: str = "1ring"          # 1ring | long
+    lookahead: int = 0            # modeled depth (0: panel on critical path)
+
+    @property
+    def n_ranks(self) -> int:
+        return self.P * self.Q
+
+    def flops(self) -> float:
+        return (2.0 / 3.0) * self.N ** 3 + 1.5 * self.N ** 2
+
+
+@dataclasses.dataclass
+class HPLResult:
+    time_s: float
+    gflops: float
+    events: int
+    comm_time_est: float = 0.0
+
+
+class HPLRank:
+    """One MPI rank = one virtual thread."""
+
+    def __init__(self, sim: "HPLSim", rank: int):
+        self.sim = sim
+        self.rank = rank
+        self.p = rank % sim.cfg.P          # row coordinate (column-major grid)
+        self.q = rank // sim.cfg.P
+
+    def run(self):
+        sim = self.sim
+        cfg = sim.cfg
+        mpi = sim.mpi
+        blas = sim.blas[self.rank]
+        P, Q, nb, N = cfg.P, cfg.Q, cfg.nb, cfg.N
+        col_group = [self.q * P + pp for pp in range(P)]
+        row_group = [qq * P + self.p for qq in range(Q)]
+        n_panels = N // nb
+
+        for k in range(n_panels):
+            rem = N - k * nb
+            qk = k % Q                      # owning process column
+            pk = k % P                      # row owning the diagonal block
+            mloc = numroc(rem, nb, (self.p - pk) % P, P)
+            nloc = numroc(rem - nb, nb, (self.q - (k + 1) % Q) % Q, Q)
+            panel_bytes = 8.0 * (mloc + nb) * nb
+
+            if self.q == qk:
+                # --- 1. panel factorization --------------------------------
+                t = 0.0
+                for j in range(nb):
+                    t += blas.idamax(max(mloc - j, 1))
+                    t += blas.dscal(max(mloc - j, 1))
+                    t += blas.dger(max(mloc - j, 1), nb - j - 1)
+                yield t
+                # pivot search allreduces: one aggregated column sync +
+                # nb analytic small allreduces (latency-bound)
+                yield from mpi.barrier(self.rank, col_group, ("pf", k, self.q))
+                ar_lat = 2 * math.ceil(math.log2(max(P, 2))) \
+                    * (sim.net.topo.base_latency + mpi.overhead)
+                yield nb * ar_lat
+                # --- 2. broadcast along my row -----------------------------
+                if Q > 1:
+                    yield from self._bcast_panel(row_group, qk, panel_bytes, k)
+            else:
+                if Q > 1:
+                    yield from self._bcast_panel(row_group, qk, panel_bytes, k)
+
+            # --- 3. trailing row swaps (U strip) among column ranks --------
+            u_bytes = 8.0 * nb * max(nloc, 0)
+            if P > 1 and u_bytes > 0:
+                rounds = math.ceil(math.log2(P))
+                peer_up = col_group[(self.p + 1) % P]
+                peer_dn = col_group[(self.p - 1) % P]
+                for r in range(rounds):
+                    ev = mpi.isend(self.rank, peer_up,
+                                   u_bytes / max(rounds, 1),
+                                   tag=(k * 7 + r) % 65536)
+                    yield from mpi.recv(peer_dn, self.rank,
+                                        tag=(k * 7 + r) % 65536)
+                    yield ev
+                yield blas.dlaswp(nb, max(nloc, 1))
+
+            # --- 4. trailing update ---------------------------------------
+            if nloc > 0:
+                yield blas.dtrsm(nb, nloc)
+                if mloc > 0:
+                    yield blas.dgemm(mloc, nloc, nb)
+
+        sim.finish_times[self.rank] = sim.engine.now
+
+    def _bcast_panel(self, row_group, root_q, nbytes, k):
+        sim = self.sim
+        cfg = sim.cfg
+        mpi = sim.mpi
+        Q = cfg.Q
+        root_rank = row_group[root_q]
+        if cfg.bcast == "long":
+            yield from mpi.bcast(self.rank, root_rank, row_group, nbytes,
+                                 op_id=("bc", k, self.p))
+            return
+        # HPL 1ring: store-and-forward pipeline around the row ring
+        my_i = (self.q - root_q) % Q
+        if my_i > 0:
+            prev_rank = row_group[(self.q - 1) % Q]
+            yield from mpi.recv(prev_rank, self.rank, tag=(k * 3 + 1) % 65536)
+        if my_i < Q - 1:
+            nxt = row_group[(self.q + 1) % Q]
+            ev = mpi.isend(self.rank, nxt, nbytes, tag=(k * 3 + 1) % 65536)
+            if cfg.lookahead == 0:
+                yield ev
+
+
+class HPLSim:
+    def __init__(self, cfg: HPLConfig, node: NodeModel, topology,
+                 ranks_per_node: int = 1):
+        self.cfg = cfg
+        self.node = node
+        self.engine = Engine()
+        self.net = Network(self.engine, topology)
+        self.mpi = SimMPI(self.engine, self.net, cfg.n_ranks,
+                          rank_to_node=lambda r: r // ranks_per_node)
+        # per-rank BLAS: a rank uses its share of the node
+        share = dataclasses.replace(
+            node, peak_flops=node.peak_flops / ranks_per_node,
+            mem_bw=node.mem_bw / ranks_per_node,
+            cores=max(node.cores // ranks_per_node, 1))
+        self.blas = [SimBLAS(share) for _ in range(cfg.n_ranks)]
+        self.finish_times: Dict[int, float] = {}
+
+    def run(self) -> HPLResult:
+        for r in range(self.cfg.n_ranks):
+            self.engine.spawn(HPLRank(self, r).run(), name=f"rank{r}")
+        self.engine.run_all()
+        t = max(self.finish_times.values())
+        return HPLResult(time_s=t, gflops=self.cfg.flops() / t / 1e9,
+                         events=self.engine.event_count)

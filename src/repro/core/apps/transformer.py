@@ -1,0 +1,172 @@
+"""Transformer train/serve step as a DES application on the TPU torus.
+
+This is the hardware-adaptation analogue of apps/hpl.py: instead of HPL's
+panel/bcast/update flow over MPI on a fat-tree, the application is a
+scan-over-layers train (or decode) step whose per-layer compute and
+collective schedule comes from the compiled dry-run record.
+
+What the DES adds over the analytic SimXLA model (both are paper-style
+"library models"):
+  * contention on shared links — cross-pod DCN traffic, multi-axis
+    collectives sharing ring links;
+  * straggler injection (slow chip / slow link) for the fault-tolerance
+    what-if studies (ft/straggler.py consumes these results);
+  * jitter — per-rank compute-time perturbation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.engine import Engine
+from repro.core.hardware.network import Network
+from repro.core.hardware.node import NodeModel, TPU_V5E
+from repro.core.hardware.topology import Torus, MultiPod
+from repro.core.simmpi import SimMPI
+from repro.core.simxla import ICIParams, ICI
+
+
+@dataclasses.dataclass
+class LayerWork:
+    compute_s: float
+    # (op, wire_bytes, axis): axis 'model' | 'data' | 'pod'
+    collectives: List[Tuple[str, float, str]]
+
+
+@dataclasses.dataclass
+class StepWorkload:
+    """Per-device, per-layer workload; see from_dryrun_record."""
+    layers: List[LayerWork]
+    tail_collectives: List[Tuple[str, float, str]]   # e.g. grad all-reduce
+    tail_compute_s: float = 0.0
+
+    @staticmethod
+    def from_dryrun_record(record: Dict, num_layers: int,
+                           chip: NodeModel = TPU_V5E) -> "StepWorkload":
+        r = record["roofline"]
+        chips = record["chips"]
+        flops = r["hlo_flops_total"] / chips
+        nbytes = r["hlo_bytes_total"] / chips
+        compute = max(flops / (chip.peak_flops * chip.gemm_efficiency),
+                      nbytes / 3.0 / (chip.mem_bw * chip.mem_efficiency))
+        per_layer = compute / max(num_layers, 1)
+        colls = record.get("collectives", {})
+        layer_colls: List[Tuple[str, float, str]] = []
+        tail: List[Tuple[str, float, str]] = []
+        for op, agg in colls.items():
+            wire = agg["wire_bytes"]
+            if op == "all-reduce" and record.get("kind") == "train":
+                # gradient reduction: half at tail over 'data' (+pod), rest
+                # per-layer over 'model'
+                tail.append((op, wire * 0.5, "data"))
+                layer_colls.append((op, wire * 0.5 / num_layers, "model"))
+            else:
+                layer_colls.append((op, wire / num_layers, "model"))
+        return StepWorkload(
+            layers=[LayerWork(per_layer, list(layer_colls))
+                    for _ in range(num_layers)],
+            tail_collectives=tail)
+
+
+class TransformerStepSim:
+    def __init__(self, workload: StepWorkload, *,
+                 mesh: Tuple[int, int] = (16, 16), pods: int = 1,
+                 chip: NodeModel = TPU_V5E, ici: ICIParams = ICI,
+                 straggler: Optional[Tuple[int, float]] = None,
+                 jitter: float = 0.0, seed: int = 0):
+        self.workload = workload
+        self.mesh = mesh
+        self.pods = pods
+        self.n_per_pod = mesh[0] * mesh[1]
+        self.n = self.n_per_pod * pods
+        self.engine = Engine()
+        if pods == 1:
+            topo = Torus(mesh, link_bw=ici.link_bw)
+        else:
+            topo = MultiPod([Torus(mesh, link_bw=ici.link_bw)
+                             for _ in range(pods)],
+                            self.n_per_pod, dcn_bw_per_node=ici.dcn_bw,
+                            dcn_latency=ici.dcn_latency)
+        self.net = Network(self.engine, topo)
+        self.mpi = SimMPI(self.engine, self.net, self.n)
+        self.straggler = straggler
+        self.jitter = jitter
+        self.seed = seed
+        self.finish: Dict[int, float] = {}
+
+    # mesh coordinate helpers (rank = pod*n_per_pod + row*cols + col)
+    def _groups(self, rank: int) -> Dict[str, List[int]]:
+        rows, cols = self.mesh
+        pod = rank // self.n_per_pod
+        local = rank % self.n_per_pod
+        r, c = divmod(local, cols)
+        base = pod * self.n_per_pod
+        return {
+            "model": [base + r * cols + cc for cc in range(cols)],
+            "data": [base + rr * cols + c for rr in range(rows)],
+            "pod": [p * self.n_per_pod + local for p in range(self.pods)],
+        }
+
+    def _compute_scale(self, rank: int) -> float:
+        s = 1.0
+        if self.straggler and rank == self.straggler[0]:
+            s *= self.straggler[1]
+        if self.jitter:
+            # deterministic per-rank jitter (no RNG in sim time)
+            h = (rank * 2654435761 + self.seed) & 0xffffffff
+            s *= 1.0 + self.jitter * ((h / 0xffffffff) - 0.5) * 2.0
+        return s
+
+    def _rank_proc(self, rank: int):
+        mpi = self.mpi
+        groups = self._groups(rank)
+        scale = self._compute_scale(rank)
+        for li, layer in enumerate(self.workload.layers):
+            yield layer.compute_s * scale
+            for ci, (op, wire, axis) in enumerate(layer.collectives):
+                grp = groups[axis]
+                if len(grp) <= 1:
+                    continue
+                yield from self._collective(rank, op, wire, grp,
+                                            op_id=("l", li, ci, axis))
+        if self.workload.tail_compute_s:
+            yield self.workload.tail_compute_s * scale
+        for ci, (op, wire, axis) in enumerate(self.workload.tail_collectives):
+            grp = groups[axis]
+            if len(grp) > 1:
+                yield from self._collective(rank, op, wire, grp,
+                                            op_id=("t", ci, axis))
+            if axis == "data" and self.pods > 1:
+                pg = groups["pod"]
+                yield from self._collective(rank, op, wire / len(grp), pg,
+                                            op_id=("tp", ci))
+        self.finish[rank] = self.engine.now
+
+    def _collective(self, rank, op, wire_bytes, group, op_id):
+        """Ring collectives as real flows; wire_bytes already follows the
+        hlo_parse ring convention (bytes through one device)."""
+        mpi = self.mpi
+        n = len(group)
+        rounds = {"all-reduce": 2 * (n - 1), "all-gather": n - 1,
+                  "reduce-scatter": n - 1, "all-to-all": n - 1,
+                  "collective-permute": 1}.get(op, n - 1)
+        per_round = wire_bytes / max(rounds, 1)
+        idx = {r: i for i, r in enumerate(group)}
+        me = idx[rank]
+        nxt, prv = group[(me + 1) % n], group[(me - 1) % n]
+        for k in range(rounds):
+            ev = mpi.isend(rank, nxt, per_round,
+                           tag=hash((op_id, k, me)) & 0x7fffffff)
+            yield from mpi.recv(prv, rank,
+                                tag=hash((op_id, k, (me - 1) % n))
+                                & 0x7fffffff)
+            yield ev
+
+    def run(self) -> Dict:
+        for r in range(self.n):
+            self.engine.spawn(self._rank_proc(r), name=f"chip{r}")
+        self.engine.run_all()
+        t = max(self.finish.values())
+        return {"step_s": t, "events": self.engine.event_count,
+                "min_finish": min(self.finish.values())}

@@ -1,0 +1,120 @@
+"""Discrete-event simulation engine (the paper's SystemC/CoFluent analog).
+
+Sequential engine; every simulated MPI rank / virtual thread is a Python
+generator ("CoFluent virtual thread").  Processes yield:
+
+    float/int        — wait that many simulated seconds
+    Event            — park until the event fires
+    Process          — park until the child process terminates (join)
+    ("spawn", gen)   — start a child process, continue immediately
+
+The paper's "privatization of global variables" workaround (§III-C) is
+unnecessary here: each generator closes over its own state — documented in
+DESIGN.md §9.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from typing import Any, Callable, Generator, List, Optional
+
+
+class Event:
+    __slots__ = ("engine", "_set", "waiters", "payload")
+
+    def __init__(self, engine: "Engine"):
+        self.engine = engine
+        self._set = False
+        self.waiters: List["Process"] = []
+        self.payload: Any = None
+
+    def set(self, payload: Any = None):
+        if self._set:
+            return
+        self._set = True
+        self.payload = payload
+        for proc in self.waiters:
+            self.engine._schedule(0.0, proc._step, payload)
+        self.waiters.clear()
+
+    @property
+    def is_set(self) -> bool:
+        return self._set
+
+
+class Process:
+    __slots__ = ("engine", "gen", "done", "_joiners", "name")
+
+    def __init__(self, engine: "Engine", gen: Generator, name: str = ""):
+        self.engine = engine
+        self.gen = gen
+        self.done = Event(engine)
+        self.name = name
+
+    def _step(self, send_value: Any = None):
+        eng = self.engine
+        try:
+            while True:
+                cmd = self.gen.send(send_value)
+                send_value = None
+                if isinstance(cmd, (int, float)):
+                    if cmd < 0:
+                        raise ValueError(f"negative wait {cmd} in {self.name}")
+                    eng._schedule(float(cmd), self._step, None)
+                    return
+                if isinstance(cmd, Event):
+                    if cmd.is_set:
+                        send_value = cmd.payload
+                        continue
+                    cmd.waiters.append(self)
+                    return
+                if isinstance(cmd, Process):
+                    if cmd.done.is_set:
+                        continue
+                    cmd.done.waiters.append(self)
+                    return
+                if isinstance(cmd, tuple) and cmd and cmd[0] == "spawn":
+                    eng.spawn(cmd[1])
+                    continue
+                raise TypeError(f"bad yield {cmd!r} from {self.name}")
+        except StopIteration:
+            self.done.set()
+
+
+class Engine:
+    def __init__(self):
+        self.now = 0.0
+        self._heap: list = []
+        self._seq = 0
+        self.event_count = 0
+
+    def event(self) -> Event:
+        return Event(self)
+
+    def _schedule(self, dt: float, fn: Callable, arg: Any):
+        self._seq += 1
+        heapq.heappush(self._heap, (self.now + dt, self._seq, fn, arg))
+
+    def call_at(self, t: float, fn: Callable, arg: Any = None):
+        self._seq += 1
+        heapq.heappush(self._heap, (max(t, self.now), self._seq, fn, arg))
+
+    def spawn(self, gen: Generator, name: str = "") -> Process:
+        proc = Process(self, gen, name)
+        self._schedule(0.0, proc._step, None)
+        return proc
+
+    def run(self, until: float = math.inf) -> float:
+        heap = self._heap
+        while heap:
+            t, _, fn, arg = heap[0]
+            if t > until:
+                break
+            heapq.heappop(heap)
+            self.now = t
+            self.event_count += 1
+            fn(arg)
+        return self.now
+
+    def run_all(self) -> float:
+        return self.run(math.inf)

@@ -1,0 +1,6 @@
+from .node import NodeModel, TPU_V5E, frontera_node, pupmaya_node
+from .network import Network, Flow
+from . import topology
+
+__all__ = ["NodeModel", "TPU_V5E", "frontera_node", "pupmaya_node",
+           "Network", "Flow", "topology"]

@@ -1,0 +1,84 @@
+"""Node (processing element) analytical models.
+
+Paper §III-A1: compute-bound ops cost ``ops / (peak x efficiency)``;
+bandwidth-bound ops cost ``bytes / (bw x efficiency)``.  Peak numbers and
+efficiencies are *inputs* measured by microbenchmark (core/calibrate.py)
+or taken from public specs.  The same form covers CPU, GPU and TPU chips
+(heterogeneous-architecture extension of CSMethod).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeModel:
+    name: str
+    peak_flops: float            # node peak, FLOP/s (at sustained AVX/MXU clock)
+    mem_bw: float                # B/s
+    cores: int = 1
+    gemm_efficiency: float = 0.92
+    mem_efficiency: float = 0.80
+    blas_latency: float = 2e-7   # theta: per-call overhead (s)
+    # accelerator section (paper's CPU-GPGPU heterogeneous extension)
+    accel_peak_flops: float = 0.0
+    accel_mem_bw: float = 0.0
+    accel_efficiency: float = 0.75
+
+    @property
+    def core_peak(self) -> float:
+        return self.peak_flops / max(self.cores, 1)
+
+    def gemm_time(self, ops: float, single_core: bool = False) -> float:
+        peak = self.core_peak if single_core else self.peak_flops
+        return ops / (peak * self.gemm_efficiency) + self.blas_latency
+
+    def mem_time(self, nbytes: float) -> float:
+        return nbytes / (self.mem_bw * self.mem_efficiency) + self.blas_latency
+
+
+def xeon_node(name: str, sockets: int, cores_per_socket: int,
+              avx_clock_ghz: float, flops_per_cycle: int = 32,
+              ddr_gbs: float = 100.0, **kw) -> NodeModel:
+    cores = sockets * cores_per_socket
+    return NodeModel(name=name,
+                     peak_flops=cores * flops_per_cycle * avx_clock_ghz * 1e9,
+                     mem_bw=ddr_gbs * 1e9, cores=cores, **kw)
+
+
+# --- systems from the paper -------------------------------------------------
+
+def local_node() -> NodeModel:
+    """Paper Table I: 2x Xeon E5-2699 v4 Broadwell, 22c @2.2 GHz, DDR4-2400.
+    Broadwell AVX2: 16 DP flops/cycle; AVX base ~1.8 GHz."""
+    return xeon_node("bdw-2699v4", 2, 22, 1.8, flops_per_cycle=16,
+                     ddr_gbs=153.6)
+
+
+def frontera_node() -> NodeModel:
+    """Frontera: 2x Xeon Platinum 8280 28c; AVX-512 sustained ~1.8 GHz
+    (paper: nominal 2.7 GHz can't be held with AVX-512), 32 DP flops/cyc,
+    DDR4-2933 x 6ch x 2."""
+    return xeon_node("clx-8280", 2, 28, 1.8, flops_per_cycle=32,
+                     ddr_gbs=2 * 6 * 23.46)
+
+
+def pupmaya_node() -> NodeModel:
+    """PupMaya: 2x Xeon Gold 6148 20c; AVX-512 sustained ~1.6 GHz,
+    DDR4-2666."""
+    return xeon_node("skx-6148", 2, 20, 1.6, flops_per_cycle=32,
+                     ddr_gbs=2 * 6 * 21.3)
+
+
+# --- TPU adaptation target ---------------------------------------------------
+
+TPU_V5E = NodeModel(
+    name="tpu-v5e",
+    peak_flops=197e12,        # bf16
+    mem_bw=819e9,
+    cores=1,
+    gemm_efficiency=0.90,     # large-matmul MXU efficiency (public MLPerf-ish)
+    mem_efficiency=0.85,
+    blas_latency=2e-6,        # per-op dispatch overhead
+)

@@ -1,0 +1,69 @@
+"""Public prediction API: the paper's use-case surface.
+
+``predict_cell(arch, shape, mesh)`` reads the dry-run record (lower+compile
+already done by launch/dryrun.py) and returns SimXLA's analytic step-time
+prediction; ``predict_cell_des`` runs the full DES with contention /
+stragglers.  ``whatif`` re-predicts under hardware deltas (faster links,
+more HBM bandwidth, straggler chips) — §V of the paper, TPU edition.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Dict, Optional
+
+from repro.configs import get_config, get_shape
+from .hardware.node import NodeModel, TPU_V5E
+from .simxla import ICIParams, ICI, SimXLA, StepPrediction
+from .apps.transformer import StepWorkload, TransformerStepSim
+
+DRYRUN_DIR = Path("experiments/dryrun")
+
+
+def load_record(arch: str, shape: str, mesh: str = "16x16",
+                dryrun_dir: Path = DRYRUN_DIR) -> Dict:
+    p = Path(dryrun_dir) / f"{arch}__{shape}__{mesh}.json"
+    if not p.exists():
+        raise FileNotFoundError(
+            f"dry-run record {p} missing — run "
+            f"`python -m repro.launch.dryrun --arch {arch} --shape {shape}`")
+    return json.loads(p.read_text())
+
+
+def predict_cell(arch: str, shape: str, mesh: str = "16x16",
+                 chip: NodeModel = TPU_V5E, ici: ICIParams = ICI,
+                 overlap: float = 0.7,
+                 dryrun_dir: Path = DRYRUN_DIR) -> StepPrediction:
+    rec = load_record(arch, shape, mesh, dryrun_dir)
+    return SimXLA(chip=chip, ici=ici, overlap=overlap).predict(rec)
+
+
+def predict_cell_des(arch: str, shape: str, mesh: str = "16x16",
+                     straggler=None, jitter: float = 0.0,
+                     dryrun_dir: Path = DRYRUN_DIR) -> Dict:
+    rec = load_record(arch, shape, mesh, dryrun_dir)
+    cfg = get_config(arch)
+    wl = StepWorkload.from_dryrun_record(rec, cfg.num_layers)
+    pods = 2 if mesh == "2x16x16" else 1
+    sim = TransformerStepSim(wl, mesh=(16, 16), pods=pods,
+                             straggler=straggler, jitter=jitter)
+    return sim.run()
+
+
+def whatif(arch: str, shape: str, mesh: str = "16x16", *,
+           link_bw_scale: float = 1.0, hbm_bw_scale: float = 1.0,
+           peak_scale: float = 1.0,
+           dryrun_dir: Path = DRYRUN_DIR) -> Dict:
+    """Paper §V for the TPU case study: predict the win from a hardware
+    change without re-running anything on hardware."""
+    base = predict_cell(arch, shape, mesh, dryrun_dir=dryrun_dir)
+    chip = dataclasses.replace(TPU_V5E,
+                               peak_flops=TPU_V5E.peak_flops * peak_scale,
+                               mem_bw=TPU_V5E.mem_bw * hbm_bw_scale)
+    ici = dataclasses.replace(ICI, link_bw=ICI.link_bw * link_bw_scale)
+    new = predict_cell(arch, shape, mesh, chip=chip, ici=ici,
+                       dryrun_dir=dryrun_dir)
+    return {"baseline_s": base.step_s, "whatif_s": new.step_s,
+            "speedup": base.step_s / max(new.step_s, 1e-12),
+            "baseline": base, "whatif": new}

@@ -1,0 +1,99 @@
+"""SimBLAS — analytical performance models of BLAS kernels (paper §III-B1).
+
+Level-3 kernels are compute-bound: ``E = mu * ops + theta`` with
+``mu = 1 / (peak * efficiency)``; Level-1/2 kernels are bandwidth-bound:
+``E = bytes / (bw * eff) + theta``.  BLAS is data-independent, so only
+shapes matter — no data is ever touched (this is what makes the matrix-A
+elision sound).
+
+``mu`` / ``theta`` come either from the node spec or from a measured
+calibration (core/calibrate.py, reproducing the paper's Fig 2 microtest
+with R^2 reported).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from .hardware.node import NodeModel
+
+
+@dataclasses.dataclass
+class BlasCounters:
+    calls: int = 0
+    flops: float = 0.0
+    bytes: float = 0.0
+    time: float = 0.0
+
+
+class SimBLAS:
+    def __init__(self, node: NodeModel, *, single_core: bool = False,
+                 mu: Optional[float] = None, theta: Optional[float] = None,
+                 theta_mem: Optional[float] = None):
+        self.node = node
+        self.single_core = single_core
+        peak = node.core_peak if single_core else node.peak_flops
+        self.mu = mu if mu is not None else 1.0 / (peak * node.gemm_efficiency)
+        self.theta = theta if theta is not None else node.blas_latency
+        # Level-1/2 calls have far smaller dispatch overhead than a GEMM
+        # (no blocking/packing setup); calibrated separately.
+        self.theta_mem = theta_mem if theta_mem is not None \
+            else min(self.theta, 2e-6)
+        self.counters = BlasCounters()
+
+    # -- helpers ----------------------------------------------------------
+    def _compute(self, ops: float) -> float:
+        t = self.mu * ops + self.theta
+        c = self.counters
+        c.calls += 1
+        c.flops += ops
+        c.time += t
+        return t
+
+    def _memory(self, nbytes: float) -> float:
+        t = (nbytes / (self.node.mem_bw * self.node.mem_efficiency)
+             + self.theta_mem)
+        c = self.counters
+        c.calls += 1
+        c.bytes += nbytes
+        c.time += t
+        return t
+
+    # -- Level 3 (compute-bound) ------------------------------------------
+    def dgemm(self, m: int, n: int, k: int) -> float:
+        return self._compute(2.0 * m * n * k + 2.0 * m * n)
+
+    def dtrsm(self, m: int, n: int, side: str = "L") -> float:
+        ops = float(m) * m * n if side == "L" else float(n) * n * m
+        return self._compute(ops)
+
+    # -- Level 2 (bandwidth-bound) ----------------------------------------
+    def dgemv(self, m: int, n: int) -> float:
+        return self._memory(8.0 * (m * n + m + n))
+
+    def dger(self, m: int, n: int) -> float:
+        # read A, x, y; write A
+        return self._memory(8.0 * (2.0 * m * n + m + n))
+
+    # -- Level 1 (bandwidth-bound) ----------------------------------------
+    def dswap(self, n: int) -> float:
+        return self._memory(8.0 * 4.0 * n)     # paper Fig 3: 4 accesses/elem
+
+    def dscal(self, n: int) -> float:
+        return self._memory(8.0 * 2.0 * n)
+
+    def daxpy(self, n: int) -> float:
+        return self._memory(8.0 * 3.0 * n)
+
+    def dcopy(self, n: int) -> float:
+        return self._memory(8.0 * 2.0 * n)
+
+    def idamax(self, n: int) -> float:
+        return self._memory(8.0 * n)
+
+    # -- HPL auxiliary kernels (paper §III-C: HPL_dlaswp*) ------------------
+    def dlaswp(self, rows: int, cols: int) -> float:
+        return self._memory(8.0 * 4.0 * rows * cols)
+
+    def dlacpy(self, rows: int, cols: int) -> float:
+        return self._memory(8.0 * 2.0 * rows * cols)

@@ -1,0 +1,232 @@
+"""SimMPI — MPI library model on the stream-level network (paper §III-B2).
+
+Peer-to-peer ops run as flows on the network model (so contention is
+emergent); eager vs rendezvous protocol by message size.  Collectives are
+decomposed into p2p rounds mimicking OpenMPI/IntelMPI algorithm selection
+(binomial / ring / recursive-doubling / Rabenseifner / pairwise) with the
+same size-based switch points.
+
+Every rank is a DES virtual thread; ``yield from`` any op to advance
+simulated time.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Tuple
+
+from .engine import Engine, Event
+from .hardware.network import Network
+
+EAGER_LIMIT = 64 * 1024          # bytes: eager vs rendezvous
+RDV_HANDSHAKE = 2                # extra half-RTTs for rendezvous
+
+
+class SimMPI:
+    def __init__(self, engine: Engine, network: Network, n_ranks: int,
+                 rank_to_node=None, overhead: float = 5e-7):
+        self.engine = engine
+        self.net = network
+        self.n = n_ranks
+        self.rank_to_node = rank_to_node or (lambda r: r)
+        self.overhead = overhead         # per-call software overhead (s)
+        self._posted: Dict[Tuple[int, int, int], List[Event]] = {}
+        self._recv_wait: Dict[Tuple[int, int, int], List[Event]] = {}
+        self._coll_state: Dict = {}
+        self.counters = {"p2p_msgs": 0, "p2p_bytes": 0.0, "colls": 0}
+
+    # ---------------------------------------------------------------- p2p
+    def isend(self, src: int, dst: int, nbytes: float, tag: int = 0) -> Event:
+        """Post a send.  Returns the *sender-side* completion event:
+        eager messages complete for the sender once buffered (overhead);
+        rendezvous messages complete when the transfer finishes.  The
+        receiver always waits for the transfer (see recv)."""
+        self.counters["p2p_msgs"] += 1
+        self.counters["p2p_bytes"] += nbytes
+        eng = self.engine
+        eager = nbytes <= EAGER_LIMIT
+        transfer_done = eng.event()
+        if src == dst:
+            eng.call_at(eng.now + self.overhead,
+                        lambda _: transfer_done.set(), None)
+            return transfer_done
+        lat_extra = 0.0 if eager \
+            else RDV_HANDSHAKE * self.net.topo.base_latency
+
+        def go(_):
+            flow_done = self.net.send(self.rank_to_node(src),
+                                      self.rank_to_node(dst), nbytes)
+            flow_done.waiters.append(_Relay(transfer_done))
+        eng.call_at(eng.now + self.overhead + lat_extra, go, None)
+
+        key = (src, dst, tag)
+        waiters = self._recv_wait.get(key)
+        if waiters:
+            waiters.pop(0).set(transfer_done)
+        else:
+            self._posted.setdefault(key, []).append(transfer_done)
+        if eager:
+            send_done = eng.event()
+            eng.call_at(eng.now + self.overhead,
+                        lambda _: send_done.set(), None)
+            return send_done
+        return transfer_done
+
+    def send(self, src: int, dst: int, nbytes: float, tag: int = 0):
+        """Generator: blocking send."""
+        ev = self.isend(src, dst, nbytes, tag)
+        yield ev
+
+    def recv(self, src: int, dst: int, tag: int = 0):
+        """Generator: blocking receive — waits for the matching send's
+        transfer to complete."""
+        key = (src, dst, tag)
+        box = self._posted.get(key)
+        if box:
+            transfer = box.pop(0)
+        else:
+            w = self.engine.event()
+            self._recv_wait.setdefault(key, []).append(w)
+            transfer = yield w
+        yield transfer
+
+    def sendrecv(self, me: int, peer: int, nbytes: float, tag: int = 0):
+        ev = self.isend(me, peer, nbytes, tag)
+        yield from self.recv(peer, me, tag)
+        yield ev
+
+    # --------------------------------------------------------- collectives
+    # One generator per participating rank; all ranks call with the same
+    # group and op_id (unique per call site x step).
+    def _gather_barrier(self, op_id, group: List[int], rank: int):
+        """All ranks of `group` rendezvous; returns (event, is_root)."""
+        st = self._coll_state.setdefault(op_id, {"arrived": 0,
+                                                 "ev": self.engine.event()})
+        st["arrived"] += 1
+        if st["arrived"] == len(group):
+            st["ev"].set()
+            self._coll_state.pop(op_id, None)
+        return st["ev"]
+
+    def barrier(self, rank: int, group: List[int], op_id):
+        ev = self._gather_barrier(op_id, group, rank)
+        yield ev
+        # dissemination rounds: ceil(log2 n) latency exchanges
+        n = len(group)
+        rounds = max(1, math.ceil(math.log2(max(n, 2))))
+        yield rounds * (self.net.topo.base_latency + self.overhead)
+
+    def bcast(self, rank: int, root: int, group: List[int], nbytes: float,
+              op_id):
+        """Binomial tree for small msgs; scatter+ring-allgather for large
+        (OpenMPI/van-de-Geijn switch at 512 KiB)."""
+        self.counters["colls"] += 1
+        n = len(group)
+        if n <= 1:
+            return
+        if nbytes < 512 * 1024:
+            yield from self._bcast_binomial(rank, root, group, nbytes, op_id)
+        else:
+            # scatter (binomial, nbytes/n chunks) + ring allgather
+            yield from self._bcast_binomial(rank, root, group, nbytes / n,
+                                            (op_id, "scat"))
+            yield from self.allgather(rank, group, nbytes / n,
+                                      (op_id, "ag"))
+
+    def _bcast_binomial(self, rank: int, root: int, group: List[int],
+                        nbytes: float, op_id):
+        n = len(group)
+        idx = {r: i for i, r in enumerate(group)}
+        me = (idx[rank] - idx[root]) % n
+        rounds = math.ceil(math.log2(max(n, 2)))
+        # virtual rank 0 is root; in round k, ranks < 2^k send to +2^k
+        recv_round = None if me == 0 else int(math.floor(math.log2(me)))
+        if recv_round is not None:
+            src_v = me - (1 << recv_round)
+            src = group[(src_v + idx[root]) % n]
+            yield from self.recv(src, rank, tag=hash((op_id, me)) & 0xffff)
+        start = 0 if me == 0 else recv_round + 1
+        for k in range(start, rounds):
+            dst_v = me + (1 << k)
+            if dst_v < n:
+                dst = group[(dst_v + idx[root]) % n]
+                ev = self.isend(rank, dst, nbytes,
+                                tag=hash((op_id, dst_v)) & 0xffff)
+                yield ev
+
+    def allreduce(self, rank: int, group: List[int], nbytes: float, op_id):
+        """Recursive doubling (small) / Rabenseifner reduce-scatter+allgather
+        (large, switch 64 KiB)."""
+        self.counters["colls"] += 1
+        n = len(group)
+        if n <= 1:
+            return
+        idx = {r: i for i, r in enumerate(group)}
+        me = idx[rank]
+        if nbytes < 64 * 1024:
+            rounds = math.ceil(math.log2(n))
+            for k in range(rounds):
+                peer_v = me ^ (1 << k)
+                if peer_v < n:
+                    peer = group[peer_v]
+                    yield from self.sendrecv(rank, peer, nbytes,
+                                             tag=hash((op_id, k)) & 0xffff)
+        else:
+            yield from self.reduce_scatter(rank, group, nbytes, (op_id, "rs"))
+            yield from self.allgather(rank, group, nbytes / n, (op_id, "ag"))
+
+    def reduce_scatter(self, rank: int, group: List[int], nbytes: float,
+                       op_id):
+        """Ring reduce-scatter: n-1 rounds of nbytes/n to the neighbor."""
+        n = len(group)
+        if n <= 1:
+            return
+        idx = {r: i for i, r in enumerate(group)}
+        me = idx[rank]
+        nxt, prv = group[(me + 1) % n], group[(me - 1) % n]
+        for k in range(n - 1):
+            ev = self.isend(rank, nxt, nbytes / n,
+                            tag=hash((op_id, k, me)) & 0xffff)
+            yield from self.recv(prv, rank,
+                                 tag=hash((op_id, k, (me - 1) % n)) & 0xffff)
+            yield ev
+
+    def allgather(self, rank: int, group: List[int], nbytes_shard: float,
+                  op_id):
+        """Ring allgather: n-1 rounds forwarding shards."""
+        n = len(group)
+        if n <= 1:
+            return
+        idx = {r: i for i, r in enumerate(group)}
+        me = idx[rank]
+        nxt, prv = group[(me + 1) % n], group[(me - 1) % n]
+        for k in range(n - 1):
+            ev = self.isend(rank, nxt, nbytes_shard,
+                            tag=hash((op_id, k, me)) & 0xffff)
+            yield from self.recv(prv, rank,
+                                 tag=hash((op_id, k, (me - 1) % n)) & 0xffff)
+            yield ev
+
+    def alltoall(self, rank: int, group: List[int], nbytes_per_pair: float,
+                 op_id):
+        """Pairwise exchange: n-1 rounds."""
+        self.counters["colls"] += 1
+        n = len(group)
+        idx = {r: i for i, r in enumerate(group)}
+        me = idx[rank]
+        for k in range(1, n):
+            peer = group[me ^ k] if (me ^ k) < n else None
+            if peer is None:
+                continue
+            yield from self.sendrecv(rank, peer, nbytes_per_pair,
+                                     tag=hash((op_id, k)) & 0xffff)
+
+
+class _Relay:
+    """Adapter: lets a Network Event set another Event on fire."""
+    __slots__ = ("target",)
+
+    def __init__(self, target: Event):
+        self.target = target
+
+    def _step(self, payload=None):
+        self.target.set(payload)

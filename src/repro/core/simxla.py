@@ -1,0 +1,136 @@
+"""SimXLA — the SimBLAS/SimMPI idea adapted to the TPU/XLA world.
+
+Where the paper models BLAS calls + MPI collectives on a fat-tree, the
+TPU workload is XLA HLO ops + XLA collectives on an ICI torus.  The
+library-layer models here consume the per-device (flops, bytes,
+collective) trace extracted from the *compiled dry-run artifact*
+(roofline/hlo_parse.py) — the exact analogue of substituting BLAS calls
+with analytical models: data content never matters, only shapes.
+
+Two fidelity levels (mirroring the paper's hybrid):
+  * analytic (this module): closed-form ring/torus collective times +
+    roofline op times + an overlap model;
+  * DES (core/apps/transformer.py): per-rank virtual threads issuing
+    flows on the Torus topology — contention is emergent.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+from .hardware.node import NodeModel, TPU_V5E
+
+
+@dataclasses.dataclass(frozen=True)
+class ICIParams:
+    link_bw: float = 50e9          # B/s per link per direction
+    links_per_axis: int = 2        # bidirectional ring on each torus axis
+    latency: float = 1e-6          # per collective-phase software latency
+    dcn_bw: float = 25e9           # per-chip cross-pod bandwidth
+    dcn_latency: float = 10e-6
+
+
+ICI = ICIParams()
+
+
+def ring_allreduce_time(nbytes: float, n: int, ici: ICIParams = ICI) -> float:
+    """Bidirectional-ring all-reduce on one torus axis: reduce-scatter +
+    all-gather, each moving (n-1)/n of the buffer over 2 links."""
+    if n <= 1 or nbytes <= 0:
+        return 0.0
+    wire = 2.0 * (n - 1) / n * nbytes
+    return wire / (ici.link_bw * ici.links_per_axis) \
+        + 2.0 * (n - 1) * ici.latency
+
+
+def ring_allgather_time(result_bytes: float, n: int,
+                        ici: ICIParams = ICI) -> float:
+    if n <= 1 or result_bytes <= 0:
+        return 0.0
+    wire = (n - 1) / n * result_bytes
+    return wire / (ici.link_bw * ici.links_per_axis) + (n - 1) * ici.latency
+
+
+def reduce_scatter_time(shard_bytes: float, n: int,
+                        ici: ICIParams = ICI) -> float:
+    if n <= 1 or shard_bytes <= 0:
+        return 0.0
+    wire = (n - 1) * shard_bytes
+    return wire / (ici.link_bw * ici.links_per_axis) + (n - 1) * ici.latency
+
+
+def all_to_all_time(nbytes: float, n: int, ici: ICIParams = ICI) -> float:
+    """All-to-all on a ring: each chip sends (n-1)/n of its buffer; average
+    hop distance n/4 on a bidirectional ring inflates wire occupancy."""
+    if n <= 1 or nbytes <= 0:
+        return 0.0
+    wire = (n - 1) / n * nbytes * (n / 4.0) / max(n - 1, 1) * 2.0
+    return wire / (ici.link_bw * ici.links_per_axis) + (n - 1) * ici.latency
+
+
+def collective_permute_time(nbytes: float, ici: ICIParams = ICI) -> float:
+    return nbytes / (ici.link_bw * ici.links_per_axis) + ici.latency
+
+
+def collective_time(op: str, wire_bytes: float, group_size: int,
+                    ici: ICIParams = ICI) -> float:
+    """Time for one collective given the *ring wire bytes* already computed
+    by the HLO analyzer (hlo_parse ring-algorithm convention)."""
+    if wire_bytes <= 0:
+        return 0.0
+    n = max(group_size, 2)
+    phases = {"all-reduce": 2 * (n - 1), "all-gather": n - 1,
+              "reduce-scatter": n - 1, "all-to-all": n - 1,
+              "collective-permute": 1}.get(op, n - 1)
+    return wire_bytes / (ici.link_bw * ici.links_per_axis) \
+        + phases * ici.latency
+
+
+@dataclasses.dataclass
+class StepPrediction:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    step_s: float
+    bound_s: float
+    breakdown: Dict[str, float]
+
+
+class SimXLA:
+    """Analytic step-time predictor for a compiled (arch x shape x mesh)
+    cell, driven by the dry-run record."""
+
+    def __init__(self, chip: NodeModel = TPU_V5E, ici: ICIParams = ICI,
+                 overlap: float = 0.7, fusion_efficiency: float = 3.0):
+        self.chip = chip
+        self.ici = ici
+        # fraction of collective time hidden under compute (XLA latency
+        # hiding / async collectives)
+        self.overlap = overlap
+        # our HLO byte model counts op-boundary traffic on the *CPU*-
+        # partitioned module; TPU fusion materializes ~1/fusion_efficiency
+        # of those boundaries (calibratable; see EXPERIMENTS.md §Sim-accuracy)
+        self.fusion_efficiency = fusion_efficiency
+
+    def predict(self, record: Dict) -> StepPrediction:
+        """record: one experiments/dryrun/*.json cell."""
+        r = record["roofline"]
+        flops = r["hlo_flops_total"] / record["chips"]
+        nbytes = r["hlo_bytes_total"] / record["chips"]
+        compute = flops / (self.chip.peak_flops * self.chip.gemm_efficiency)
+        memory = (nbytes / self.fusion_efficiency
+                  / (self.chip.mem_bw * self.chip.mem_efficiency))
+        coll = 0.0
+        per_op = {}
+        for op, agg in record.get("collectives", {}).items():
+            t = collective_time(op, agg["wire_bytes"],
+                                group_size=16, ici=self.ici)
+            per_op[op] = t
+            coll += t
+        onchip = max(compute, memory)
+        step = max(onchip, coll) + (1.0 - self.overlap) * min(onchip, coll)
+        return StepPrediction(
+            compute_s=compute, memory_s=memory, collective_s=coll,
+            step_s=step, bound_s=max(compute, memory, coll),
+            breakdown=dict(per_op, compute=compute, memory=memory))

@@ -1,0 +1,3 @@
+from .pipeline import SyntheticLM, DataConfig, make_batch_iterator
+
+__all__ = ["SyntheticLM", "DataConfig", "make_batch_iterator"]

@@ -1,0 +1,5 @@
+from .straggler import StepTimeMonitor, simulate_straggler_impact
+from .elastic import elastic_restart_plan
+
+__all__ = ["StepTimeMonitor", "simulate_straggler_impact",
+           "elastic_restart_plan"]

@@ -1,0 +1,44 @@
+"""Elastic scaling: restart a run on a different device count.
+
+The pieces that make this a plan rather than a prayer:
+  * checkpoints store *full logical arrays* (manifest carries shapes), so
+    restore re-shards onto whatever mesh exists (checkpoint.restore with
+    new shardings);
+  * the data pipeline is a pure function of (step, dp_rank, dp_size)
+    (data/pipeline.py), so the token stream continues exactly;
+  * sharding rules are derived from (cfg, mesh) (sharding/specs.py), not
+    hard-coded — a (8,16) degraded mesh yields a valid rule set.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+
+@dataclasses.dataclass
+class ElasticPlan:
+    old_mesh: Tuple[int, ...]
+    new_mesh: Tuple[int, ...]
+    resume_step: int
+    dp_size_old: int
+    dp_size_new: int
+    per_device_batch_new: int
+    notes: str = ""
+
+
+def elastic_restart_plan(*, global_batch: int, resume_step: int,
+                         old_mesh: Tuple[int, ...],
+                         new_mesh: Tuple[int, ...]) -> ElasticPlan:
+    """Validate that a resize keeps the global batch and data order
+    intact, and compute the new per-device partitioning."""
+    dp_old, dp_new = old_mesh[0], new_mesh[0]
+    if global_batch % dp_new != 0:
+        raise ValueError(
+            f"global batch {global_batch} not divisible by new dp={dp_new};"
+            " adjust microbatching before resuming")
+    return ElasticPlan(
+        old_mesh=old_mesh, new_mesh=new_mesh, resume_step=resume_step,
+        dp_size_old=dp_old, dp_size_new=dp_new,
+        per_device_batch_new=global_batch // dp_new,
+        notes="same global batch; data pipeline replays from resume_step "
+              "with dp_size_new shards; params re-sharded at restore")

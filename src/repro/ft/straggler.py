@@ -1,0 +1,61 @@
+"""Straggler detection + mitigation hooks.
+
+Detection: per-step wall times vs a rolling median; a step (or, on a real
+multi-host deployment, a host's all-reduce arrival time) slower than
+``threshold x median`` flags a straggler.  Mitigation hooks are pluggable:
+checkpoint-and-evict, re-shard data away from the slow host, or lower the
+synchronization frequency (gradient accumulation).
+
+The simulator closes the loop: ``simulate_straggler_impact`` replays the
+step on the DES with a slow chip injected (core/apps/transformer.py) and
+reports the predicted step-time blowup — the operator can decide whether
+eviction is worth a restart *before* touching the cluster (paper §V
+what-if methodology applied to fault tolerance).
+"""
+from __future__ import annotations
+
+import collections
+import statistics
+from typing import Callable, Dict, List, Optional
+
+
+class StepTimeMonitor:
+    def __init__(self, window: int = 50, threshold: float = 1.5,
+                 warmup: int = 5):
+        self.window = window
+        self.threshold = threshold
+        self.warmup = warmup
+        self.times = collections.deque(maxlen=window)
+        self.flags: List[int] = []
+        self._step = 0
+        self.on_straggler: Optional[Callable[[int, float, float], None]] = None
+
+    def record(self, step_time: float) -> bool:
+        """Returns True if this step is flagged as straggling."""
+        self._step += 1
+        flagged = False
+        if len(self.times) >= self.warmup:
+            med = statistics.median(self.times)
+            if step_time > self.threshold * med:
+                flagged = True
+                self.flags.append(self._step)
+                if self.on_straggler:
+                    self.on_straggler(self._step, step_time, med)
+        self.times.append(step_time)
+        return flagged
+
+    @property
+    def median(self) -> float:
+        return statistics.median(self.times) if self.times else 0.0
+
+
+def simulate_straggler_impact(arch: str, shape: str, mesh: str = "16x16",
+                              slowdown: float = 3.0, chip: int = 0) -> Dict:
+    """Predicted step-time impact of one slow chip (DES what-if)."""
+    from repro.core.predict import predict_cell_des
+    base = predict_cell_des(arch, shape, mesh)
+    slow = predict_cell_des(arch, shape, mesh, straggler=(chip, slowdown))
+    return {"baseline_s": base["step_s"], "straggler_s": slow["step_s"],
+            "blowup": slow["step_s"] / max(base["step_s"], 1e-12),
+            "verdict": ("evict" if slow["step_s"] > 1.3 * base["step_s"]
+                        else "tolerate")}

@@ -1,0 +1,116 @@
+"""Flash attention (causal, grouped GQA) as a Pallas TPU kernel.
+
+TPU-native design (not a CUDA port — DESIGN.md §2):
+  * grid (B, G, NQ, NK) with the KV axis innermost and *arbitrary*
+    dimension semantics: the online-softmax state (m, l, acc) lives in
+    VMEM scratch and is carried across NK grid steps;
+  * q block (bq, R, hd) is flattened to (bq*R, hd) so the MXU sees a
+    (bq*R, hd) x (hd, bk) matmul — R query heads per KV group ride along
+    the sublane dim for free;
+  * fully-masked causal blocks are skipped with @pl.when (real FLOP
+    savings on TPU — the XLA fallback in models/layers.py can only mask);
+  * block sizes default to 128/128: MXU-aligned (multiples of 128) and
+    small enough that q, k, v, acc tiles fit VMEM comfortably
+    (~(bq*R + 2*bk + bq*R)*hd*4B ≈ 5 MB at R=8, hd=128).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  bq: int, bk: int, causal: bool, scale: float,
+                  n_k_blocks: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal: skip blocks strictly above the diagonal
+    run = (not causal) or (ki * bk < (qi + 1) * bq)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, :, 0, :, :]                       # (bq, R, hd)
+        r, hd = q.shape[1], q.shape[2]
+        qf = (q * scale).reshape(bq * r, hd)
+        k = k_ref[0, :, 0, :]                          # (bk, hd)
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(qf, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(
+                jnp.int32, (bq * r, bk), 0) // r
+            kpos = ki * bk + jax.lax.broadcasted_iota(
+                jnp.int32, (bq * r, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(p.astype(v.dtype), v,
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + pv
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _finish():
+        r = q_ref.shape[3]
+        hd = q_ref.shape[4]
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :, :] = out.reshape(bq, r, hd).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True, bq: int = 128,
+                        bk: int = 128, interpret: bool = False):
+    """q: (B, Sq, G, R, hd); k, v: (B, Sk, G, hd) -> (B, Sq, G, R, hd)."""
+    b, sq, g, r, hd = q.shape
+    sk = k.shape[1]
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    nq, nk = sq // bq, sk // bk
+    scale = 1.0 / math.sqrt(hd)
+    kernel = functools.partial(_flash_kernel, bq=bq, bk=bk, causal=causal,
+                               scale=scale, n_k_blocks=nk)
+    grid = (b, g, nq, nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, r, hd),
+                         lambda bi, gi, qi, ki: (bi, qi, gi, 0, 0)),
+            pl.BlockSpec((1, bk, 1, hd),
+                         lambda bi, gi, qi, ki: (bi, ki, gi, 0)),
+            pl.BlockSpec((1, bk, 1, hd),
+                         lambda bi, gi, qi, ki: (bi, ki, gi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, r, hd),
+                               lambda bi, gi, qi, ki: (bi, qi, gi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq, g, r, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq * r, 1), jnp.float32),    # m
+            pltpu.VMEM((bq * r, 1), jnp.float32),    # l
+            pltpu.VMEM((bq * r, hd), jnp.float32),   # acc
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+    )(q, k, v)

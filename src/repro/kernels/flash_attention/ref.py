@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the flash-attention kernel (grouped GQA layout)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """q: (B, Sq, G, R, hd); k, v: (B, Sk, G, hd) -> (B, Sq, G, R, hd).
+
+    Reference materializes the full score matrix — O(S^2) memory; fp32
+    softmax.
+    """
+    b, sq, g, r, hd = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bqgrk,bsgk->bgrqs", q.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    if causal:
+        qpos = jnp.arange(sq)[:, None]
+        kpos = jnp.arange(sk)[None, :]
+        scores = jnp.where((kpos <= qpos)[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrqs,bsgk->bqgrk", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,52 @@
+"""jit'd waterfilling using the Pallas masked-row-min kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import masked_min_rows, INF
+from .ref import waterfill_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("max_iters", "use_kernel"))
+def waterfill(adj, caps, max_iters: int = 64, use_kernel: bool = True):
+    """Max-min fair rates via progressive filling; the per-iteration
+    masked row-min runs through the Pallas kernel."""
+    F, L = adj.shape
+    adjf = adj.astype(jnp.float32)
+    interpret = not _on_tpu()
+
+    def minrows(share):
+        if use_kernel and F % 8 == 0 and L % 128 == 0:
+            return masked_min_rows(adj, share, bf=min(256, F),
+                                   bl=min(256, L), interpret=interpret)
+        return jnp.min(jnp.where(adj > 0, share[None, :], INF), axis=1)
+
+    def body(state):
+        rates, frozen, rem, it = state
+        active = 1.0 - frozen
+        nl = adjf.T @ active
+        share = jnp.where(nl > 0, rem / jnp.maximum(nl, 1.0), INF)
+        fmin = minrows(share)
+        fmin = jnp.where(active > 0, fmin, INF)
+        smin = jnp.min(fmin)
+        freeze_now = (jnp.abs(fmin - smin) <= 1e-6 * smin) & (active > 0)
+        new_rates = jnp.where(freeze_now, smin, rates)
+        used = adjf.T @ jnp.where(freeze_now, smin, 0.0)
+        return (new_rates, frozen + freeze_now.astype(jnp.float32),
+                jnp.maximum(rem - used, 0.0), it + 1)
+
+    def cond(state):
+        _, frozen, _, it = state
+        return (it < max_iters) & (jnp.sum(frozen) < F)
+
+    state = (jnp.zeros((F,), jnp.float32), jnp.zeros((F,), jnp.float32),
+             caps.astype(jnp.float32), jnp.asarray(0))
+    rates, _, _, _ = jax.lax.while_loop(cond, body, state)
+    return jnp.where(jnp.sum(adj, axis=1) == 0, INF, rates)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracle for the max-min fair bandwidth allocation.
+
+The paper's stream-level network model allocates link bandwidth max-min
+fairly across flows (progressive filling).  At exascale flow counts the
+allocation is the simulator's hot loop; this module is the dense jnp
+reference, the Pallas kernel tiles the flow x link masked reductions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.float32(3.4e38)
+
+
+def masked_min_rows_ref(adj, vals):
+    """adj: (F, L) bool/int; vals: (L,) f32 -> per-flow min over its links.
+    Flows with no links get +INF."""
+    masked = jnp.where(adj > 0, vals[None, :], INF)
+    return jnp.min(masked, axis=1)
+
+
+def waterfill_ref(adj, caps, max_iters: int = 64):
+    """Progressive-filling max-min allocation.
+
+    adj: (F, L) 0/1; caps: (L,) f32.  Returns rates (F,) f32.
+    Each iteration: fair share per link = remaining / active flows; every
+    unfrozen flow whose minimum share equals the global bottleneck share
+    freezes at that rate.
+    """
+    F, L = adj.shape
+    adjf = adj.astype(jnp.float32)
+
+    def body(state):
+        rates, frozen, rem, it = state
+        active = 1.0 - frozen                                  # (F,)
+        nl = adjf.T @ active                                   # (L,)
+        share = jnp.where(nl > 0, rem / jnp.maximum(nl, 1.0), INF)
+        fmin = masked_min_rows_ref(adj, share)                 # (F,)
+        fmin = jnp.where(active > 0, fmin, INF)
+        smin = jnp.min(fmin)
+        freeze_now = (jnp.abs(fmin - smin) <= 1e-6 * smin) & (active > 0)
+        new_rates = jnp.where(freeze_now, smin, rates)
+        used = adjf.T @ jnp.where(freeze_now, smin, 0.0)
+        return (new_rates, frozen + freeze_now.astype(jnp.float32),
+                jnp.maximum(rem - used, 0.0), it + 1)
+
+    def cond(state):
+        _, frozen, _, it = state
+        return (it < max_iters) & (jnp.sum(frozen) < F)
+
+    rates0 = jnp.zeros((F,), jnp.float32)
+    state = (rates0, jnp.zeros((F,), jnp.float32), caps.astype(jnp.float32),
+             jnp.asarray(0))
+    rates, _, _, _ = jax.lax.while_loop(cond, body, state)
+    # flows with no links: infinite rate (self-sends)
+    no_links = jnp.sum(adj, axis=1) == 0
+    return jnp.where(no_links, INF, rates)

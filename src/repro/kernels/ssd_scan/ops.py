@@ -1,0 +1,15 @@
+"""jit'd public wrapper for the SSD chunk-scan kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import ssd_scan
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def ssd(xh, dt, A, Bh, Ch, chunk: int = 256):
+    """See kernel.ssd_scan.  Interpret mode off-TPU."""
+    return ssd_scan(xh, dt, A, Bh, Ch, chunk,
+                    interpret=jax.default_backend() != "tpu")

@@ -1,0 +1,21 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state.  The single-pod production mesh is a 16x16 = 256
+chip pod ("data", "model"); the multi-pod mesh is 2 pods = 512 chips
+("pod", "data", "model") where the "pod" axis crosses the (slow) DCN.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices exist — used by tests."""
+    return jax.make_mesh((data, model), ("data", "model"))

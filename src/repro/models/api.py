@@ -1,0 +1,82 @@
+"""Abstract (ShapeDtypeStruct) model inputs/state for AOT lowering.
+
+This is the paper's "matrix A is never allocated" insight applied to the
+TPU world: the dry-run and the simulator only ever see shape/dtype
+descriptors — no weights, activations or caches are materialized.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig, ShapeConfig
+from repro.models import build_model
+from repro.train.optimizer import opt_init
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    f32 = jnp.float32
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    out: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        n_img = cfg.n_image_tokens
+        out["tokens"] = jax.ShapeDtypeStruct((b, s - n_img), jnp.int32)
+        out["image_embeds"] = jax.ShapeDtypeStruct((b, n_img, cfg.d_model), f32)
+    elif cfg.family == "encdec":
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        out["encoder_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), f32)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return out
+
+
+def input_logical_specs(cfg: ModelConfig, shape: ShapeConfig):
+    if shape.kind == "decode":
+        return {"tokens": ("dp", None)}
+    out = {"tokens": ("dp", "sp")}
+    if cfg.family == "vlm":
+        out["image_embeds"] = ("dp", "sp", None)
+    elif cfg.family == "encdec":
+        out["encoder_embeds"] = ("dp", "sp", None)
+    return out
+
+
+def abstract_params(cfg: ModelConfig):
+    model = build_model(cfg)
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def abstract_state(cfg: ModelConfig):
+    from repro.train.step import TrainState
+    params = abstract_params(cfg)
+    opt = jax.eval_shape(opt_init(cfg.optimizer), params)
+    return TrainState(params=params, opt=opt,
+                      step=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig):
+    model = build_model(cfg)
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                 enc_len=cfg.encoder_seq or 0))
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, key=None, scale=0.02):
+    """Concrete synthetic batch matching input_specs (smoke tests/examples)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    specs = input_specs(cfg, shape)
+    out = {}
+    for name, sds in specs.items():
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(sds.dtype, jnp.integer):
+            out[name] = jax.random.randint(sub, sds.shape, 0, cfg.vocab_size,
+                                           dtype=sds.dtype)
+        else:
+            out[name] = jax.random.normal(sub, sds.shape, sds.dtype) * scale
+    return out

@@ -1,0 +1,333 @@
+"""Core transformer building blocks (functional, pytree params).
+
+Every ``init_*`` has a sibling ``spec_*`` returning an identical tree of
+*logical* partition specs (tuples of logical axis names / None).  Logical
+axes: ``dp`` (batch), ``fsdp`` (ZeRO weight shard), ``tp`` (tensor
+parallel), ``sp`` (sequence).  ``sharding/specs.py`` resolves them onto the
+physical mesh.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Params = Dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# helpers
+
+
+def _dense_init(key, shape, in_axis=-2, dtype=jnp.float32):
+    fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+    if len(shape) > 2:  # (D, H, hd) style: fan-in is the leading dim
+        fan_in = shape[0]
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+def cast(x, dtype):
+    return x.astype(dtype) if x.dtype != dtype else x
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+
+def init_norm(key, d, norm="rms"):
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if norm == "ln":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def spec_norm(norm="rms"):
+    p = {"scale": (None,)}
+    if norm == "ln":
+        p["bias"] = (None,)
+    return p
+
+
+def apply_norm(p, x, norm="rms", eps=1e-5):
+    xf = x.astype(jnp.float32)
+    if norm == "rms":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embedding
+
+
+def rope(x, positions, theta=10000.0):
+    """x: (B, S, ..., hd), positions: (B, S) int32. Works for any rank."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (B, S, half)
+    shape = ang.shape[:2] + (1,) * (x.ndim - 3) + (half,)
+    cos = jnp.cos(ang).reshape(shape)
+    sin = jnp.sin(ang).reshape(shape)
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len, d_model):
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d_model)
+    pe = jnp.zeros((seq_len, d_model), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang))
+    pe = pe.at[:, 1::2].set(jnp.cos(ang))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# attention
+
+
+def init_attention(key, cfg):
+    """Grouped layout: wq (D, G, R, hd) where G = kv groups, R = H/G reps.
+
+    No (G·R)↔H reshapes ever touch a sharded dim, so GSPMD propagation is
+    exact whichever of G / R the mesh's `model` axis shards.
+    """
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    r = h // kv
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, kv, r, hd)),
+        "wk": _dense_init(ks[1], (d, kv, hd)),
+        "wv": _dense_init(ks[2], (d, kv, hd)),
+        "wo": _dense_init(ks[3], (kv, r, hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((kv, r, hd), jnp.float32)
+        p["bk"] = jnp.zeros((kv, hd), jnp.float32)
+        p["bv"] = jnp.zeros((kv, hd), jnp.float32)
+    return p
+
+
+def spec_attention(cfg):
+    p = {
+        "wq": ("fsdp", "tp_kv", "tp_rep", None),
+        "wk": ("fsdp", "tp_kv", None),
+        "wv": ("fsdp", "tp_kv", None),
+        "wo": ("tp_kv", "tp_rep", None, "fsdp"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ("tp_kv", "tp_rep", None)
+        p["bk"] = ("tp_kv", None)
+        p["bv"] = ("tp_kv", None)
+    return p
+
+
+def _qkv(p, x, cfg, positions):
+    """Returns q: (B,S,G,R,hd); k, v: (B,S,G,hd)."""
+    dtype = x.dtype
+    q = jnp.einsum("bsd,dgrk->bsgrk", x, cast(p["wq"], dtype))
+    k = jnp.einsum("bsd,dgk->bsgk", x, cast(p["wk"], dtype))
+    v = jnp.einsum("bsd,dgk->bsgk", x, cast(p["wv"], dtype))
+    if cfg.qkv_bias:
+        q = q + cast(p["bq"], dtype)
+        k = k + cast(p["bk"], dtype)
+        v = v + cast(p["bv"], dtype)
+    if not cfg.attention_free and cfg.rope_theta > 0:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def mha(q, k, v, causal=True, q_offset=0, kv_len=None, block_size=1024):
+    """Blockwise (online-softmax) attention: O(S·block) memory, XLA-only.
+
+    Grouped layout throughout (no KV-head expansion, no reshapes of
+    potentially-sharded dims).  q: (B, Sq, G, R, hd); k, v: (B, Sk, G, hd).
+    kv_len: optional scalar — positions >= kv_len are masked (decode cache).
+    Returns (B, Sq, G, R, hd).
+    """
+    b, sq, g, r, hd = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    qg = (q * scale).astype(q.dtype)
+
+    if sk <= block_size or sk % block_size != 0:
+        # direct path (small S / decode / non-divisible enc lengths)
+        scores = jnp.einsum("bqgrk,bsgk->bgrqs", qg, k).astype(jnp.float32)
+        if causal or kv_len is not None:
+            mask = _attn_mask(sq, sk, causal, q_offset, kv_len)  # (1,1,sq,sk)
+            bias = jnp.where(mask[0, 0], 0.0, -1e30)             # f32 (sq,sk)
+            scores = scores + bias
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        return jnp.einsum("bgrqs,bsgk->bqgrk", probs, v)
+
+    nb = sk // block_size
+    kb = jnp.moveaxis(k.reshape(b, nb, block_size, g, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nb, block_size, g, hd), 1, 0)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kblk, vblk, bi = inp
+        s = jnp.einsum("bqgrk,bsgk->bgrqs", qg, kblk).astype(jnp.float32)
+        kpos = bi * block_size + jnp.arange(block_size)
+        qpos = q_offset + jnp.arange(sq)
+        # additive f32 bias of shape (sq, blk): tiny, fuses into the einsum
+        # epilogue; a boolean `where` mask at score shape gets hoisted by XLA
+        # into a (nb, B, G, R, sq, blk) pred tensor — GBs per layer.
+        bias = jnp.zeros((sq, block_size), jnp.float32)
+        if causal:
+            bias = jnp.where(kpos[None, :] <= qpos[:, None], bias, -1e30)
+        if kv_len is not None:
+            bias = jnp.where(kpos[None, :] < kv_len, bias, -1e30)
+        s = s + bias[None, None, None]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bgrqs,bsgk->bgrqk", p.astype(q.dtype), vblk).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, g, r, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, g, r, sq), jnp.float32)
+    a0 = jnp.zeros((b, g, r, sq, hd), jnp.float32)
+    (m, l, acc), _ = lax.scan(body, (m0, l0, a0), (kb, vb, jnp.arange(nb)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]       # (b,g,r,sq,hd)
+    return jnp.moveaxis(out, 3, 1).astype(q.dtype)     # (b,sq,g,r,hd)
+
+
+def _attn_mask(sq, sk, causal, q_offset, kv_len):
+    qpos = q_offset + jnp.arange(sq)
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask = mask & (kpos[None, :] <= qpos[:, None])
+    if kv_len is not None:
+        mask = mask & (kpos[None, :] < kv_len)
+    return mask[None, None]
+
+
+def apply_attention(p, x, cfg, positions, causal=True, use_kernel=False):
+    """Full-sequence (train / prefill) self-attention. Returns (out, (k, v))."""
+    q, k, v = _qkv(p, x, cfg, positions)
+    if use_kernel:
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(q, k, v, causal=causal)
+    else:
+        out = mha(q, k, v, causal=causal,
+                  block_size=getattr(cfg, "attn_block", 1024))
+    y = jnp.einsum("bsgrk,grkd->bsd", out, cast(p["wo"], x.dtype))
+    return y, (k, v)
+
+
+def apply_attention_decode(p, x, cfg, k_cache, v_cache, cache_len):
+    """One-token decode: x (B, 1, D); caches (B, Smax, G, hd)."""
+    positions = jnp.full((x.shape[0], 1), cache_len, jnp.int32)
+    q, k, v = _qkv(p, x, cfg, positions)
+    k_cache = lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype),
+                                              cache_len, axis=1)
+    v_cache = lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype),
+                                              cache_len, axis=1)
+    out = mha(q, k_cache.astype(q.dtype), v_cache.astype(q.dtype),
+              causal=False, kv_len=cache_len + 1,
+              block_size=1 << 62)  # direct path; masking handles validity
+    y = jnp.einsum("bsgrk,grkd->bsd", out, cast(p["wo"], x.dtype))
+    return y, (k_cache, v_cache)
+
+
+# cross-attention (enc-dec) -------------------------------------------------
+
+
+def init_cross_attention(key, cfg):
+    return init_attention(key, cfg)
+
+
+def apply_cross_attention(p, x, cfg, enc_k, enc_v):
+    dtype = x.dtype
+    q = jnp.einsum("bsd,dgrk->bsgrk", x, cast(p["wq"], dtype))
+    out = mha(q, enc_k, enc_v, causal=False)
+    return jnp.einsum("bsgrk,grkd->bsd", out, cast(p["wo"], dtype))
+
+
+def cross_kv(p, enc_out, cfg):
+    dtype = enc_out.dtype
+    k = jnp.einsum("bsd,dgk->bsgk", enc_out, cast(p["wk"], dtype))
+    v = jnp.einsum("bsd,dgk->bsgk", enc_out, cast(p["wv"], dtype))
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLP
+
+
+def init_mlp(key, cfg, d_ff=None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        return {"wi": _dense_init(ks[0], (d, f)), "wg": _dense_init(ks[1], (d, f)),
+                "wo": _dense_init(ks[2], (f, d))}
+    return {"wi": _dense_init(ks[0], (d, f)), "wo": _dense_init(ks[2], (f, d))}
+
+
+def spec_mlp(cfg):
+    if cfg.act == "swiglu":
+        return {"wi": ("fsdp", "tp"), "wg": ("fsdp", "tp"), "wo": ("tp", "fsdp")}
+    return {"wi": ("fsdp", "tp"), "wo": ("tp", "fsdp")}
+
+
+def apply_mlp(p, x, cfg):
+    dtype = x.dtype
+    h = jnp.einsum("bsd,df->bsf", x, cast(p["wi"], dtype))
+    if cfg.act == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, cast(p["wg"], dtype))
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, cast(p["wo"], dtype))
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+
+
+def init_embed(key, cfg):
+    ks = jax.random.split(key, 2)
+    p = {"tok": jax.random.normal(ks[0], (cfg.vocab_padded, cfg.d_model),
+                                  jnp.float32) * 0.02}
+    if not cfg.tie_embeddings:
+        p["unembed"] = _dense_init(ks[1], (cfg.d_model, cfg.vocab_padded))
+    return p
+
+
+def spec_embed(cfg):
+    p = {"tok": ("vocab", "fsdp")}
+    if not cfg.tie_embeddings:
+        p["unembed"] = ("fsdp", "vocab")
+    return p
+
+
+def apply_embed(p, tokens, cfg):
+    emb = cast(p["tok"], jnp.dtype(cfg.dtype))
+    return jnp.take(emb, tokens, axis=0)
+
+
+def apply_unembed(p, x, cfg):
+    """Logits over the padded vocab; the pad region is masked to -inf."""
+    w = p["unembed"] if not cfg.tie_embeddings else p["tok"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, cast(w, x.dtype))
+    if cfg.vocab_padded != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, jnp.asarray(-1e30, logits.dtype), logits)
+    return logits

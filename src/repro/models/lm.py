@@ -1,0 +1,525 @@
+"""Model assembly for every assigned architecture family.
+
+One ``Model`` object per ``ModelConfig``; functional methods:
+  init(key) -> params                       param_specs() -> logical specs
+  forward(params, batch) -> (logits, aux)   loss(params, batch) -> (loss, metrics)
+  init_cache(batch) -> cache                cache_specs() -> logical specs
+  prefill(params, batch) -> (cache, logits) decode(params, cache, tok) -> (cache, logits)
+
+Layer stacks are ``lax.scan`` over stacked params (compile time independent
+of depth); remat policy from ``cfg.remat``.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.sharding.specs import constrain
+from . import layers as L
+from . import mamba2 as M
+from . import moe as MOE
+
+Params = Dict[str, Any]
+
+
+def _stack_init(init_fn, key, n):
+    """vmap an init over layer keys -> params stacked on axis 0."""
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def _stacked(spec):
+    """Prepend a None (layer) dim to every leaf of a logical spec tree."""
+    return jax.tree.map(lambda s: (None,) + tuple(s), spec,
+                        is_leaf=lambda x: type(x) is tuple)
+
+
+def _maybe_remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots
+        return jax.checkpoint(fn, policy=pol)
+    if cfg.remat == "dots_nb":
+        # save projection dots, recompute attention-score dots (they carry
+        # batch dims) — the flash-attention memory/compute tradeoff
+        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+class Model:
+    def __init__(self, cfg, use_kernel: bool = False):
+        self.cfg = cfg
+        self.use_kernel = use_kernel
+        self.dtype = jnp.dtype(cfg.dtype)
+
+    # ------------------------------------------------------------- params
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        keys = jax.random.split(key, 8)
+        p: Params = {"embed": L.init_embed(keys[0], cfg),
+                     "final_norm": L.init_norm(keys[1], cfg.d_model, cfg.norm)}
+        if cfg.family in ("dense", "moe", "vlm"):
+            p["layers"] = _stack_init(partial(self._init_layer, cfg=cfg),
+                                      keys[2], cfg.num_layers)
+        elif cfg.family == "ssm":
+            p["layers"] = _stack_init(partial(self._init_ssm_layer, cfg=cfg),
+                                      keys[2], cfg.num_layers)
+        elif cfg.family == "hybrid":
+            p["layers"] = _stack_init(partial(self._init_ssm_layer, cfg=cfg),
+                                      keys[2], cfg.num_layers)
+            p["shared"] = self._init_layer(keys[3], cfg=cfg)
+        elif cfg.family == "encdec":
+            p["enc_layers"] = _stack_init(
+                partial(self._init_layer, cfg=cfg), keys[2],
+                cfg.num_encoder_layers)
+            p["enc_norm"] = L.init_norm(keys[4], cfg.d_model, cfg.norm)
+            p["layers"] = _stack_init(
+                partial(self._init_decdec_layer, cfg=cfg), keys[3],
+                cfg.num_layers)
+        else:
+            raise ValueError(cfg.family)
+        return p
+
+    @staticmethod
+    def _init_layer(key, cfg):
+        ks = jax.random.split(key, 4)
+        p = {"ln1": L.init_norm(ks[0], cfg.d_model, cfg.norm),
+             "attn": L.init_attention(ks[1], cfg),
+             "ln2": L.init_norm(ks[2], cfg.d_model, cfg.norm)}
+        if cfg.moe is not None and cfg.family == "moe":
+            p["moe"] = MOE.init_moe(ks[3], cfg)
+        else:
+            p["mlp"] = L.init_mlp(ks[3], cfg)
+        return p
+
+    @staticmethod
+    def _init_ssm_layer(key, cfg):
+        ks = jax.random.split(key, 2)
+        return {"ln": L.init_norm(ks[0], cfg.d_model, cfg.norm),
+                "ssm": M.init_ssm(ks[1], cfg)}
+
+    @staticmethod
+    def _init_decdec_layer(key, cfg):
+        ks = jax.random.split(key, 6)
+        return {"ln1": L.init_norm(ks[0], cfg.d_model, cfg.norm),
+                "attn": L.init_attention(ks[1], cfg),
+                "lnx": L.init_norm(ks[2], cfg.d_model, cfg.norm),
+                "cross": L.init_cross_attention(ks[3], cfg),
+                "ln2": L.init_norm(ks[4], cfg.d_model, cfg.norm),
+                "mlp": L.init_mlp(ks[5], cfg)}
+
+    def param_specs(self):
+        cfg = self.cfg
+        sp: Params = {"embed": L.spec_embed(cfg),
+                      "final_norm": L.spec_norm(cfg.norm)}
+        if cfg.family in ("dense", "moe", "vlm"):
+            sp["layers"] = _stacked(self._spec_layer(cfg))
+        elif cfg.family == "ssm":
+            sp["layers"] = _stacked(self._spec_ssm_layer(cfg))
+        elif cfg.family == "hybrid":
+            sp["layers"] = _stacked(self._spec_ssm_layer(cfg))
+            sp["shared"] = self._spec_layer(cfg)
+        elif cfg.family == "encdec":
+            sp["enc_layers"] = _stacked(self._spec_layer(cfg))
+            sp["enc_norm"] = L.spec_norm(cfg.norm)
+            sp["layers"] = _stacked(self._spec_decdec_layer(cfg))
+        return sp
+
+    @staticmethod
+    def _spec_layer(cfg):
+        p = {"ln1": L.spec_norm(cfg.norm), "attn": L.spec_attention(cfg),
+             "ln2": L.spec_norm(cfg.norm)}
+        if cfg.moe is not None and cfg.family == "moe":
+            p["moe"] = MOE.spec_moe(cfg)
+        else:
+            p["mlp"] = L.spec_mlp(cfg)
+        return p
+
+    @staticmethod
+    def _spec_ssm_layer(cfg):
+        return {"ln": L.spec_norm(cfg.norm), "ssm": M.spec_ssm(cfg)}
+
+    @staticmethod
+    def _spec_decdec_layer(cfg):
+        return {"ln1": L.spec_norm(cfg.norm), "attn": L.spec_attention(cfg),
+                "lnx": L.spec_norm(cfg.norm),
+                "cross": L.spec_attention(cfg),
+                "ln2": L.spec_norm(cfg.norm), "mlp": L.spec_mlp(cfg)}
+
+    # ------------------------------------------------------------ forward
+    def _embed_inputs(self, params, batch):
+        """Returns (x, positions, loss_mask, labels)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        x = L.apply_embed(params["embed"], tokens, cfg)
+        if cfg.family == "vlm":
+            img = batch["image_embeds"].astype(self.dtype)   # (B, Nimg, D)
+            x = jnp.concatenate([img, x], axis=1)
+            n_img, s = img.shape[1], x.shape[1]
+            labels = jnp.concatenate(
+                [jnp.zeros((b, n_img), tokens.dtype), tokens], axis=1)
+            mask = (jnp.arange(s) >= n_img)[None, :].astype(jnp.float32)
+            mask = mask * (jnp.arange(s) < s - 1)[None, :]
+            labels = jnp.roll(labels, -1, axis=1)
+        else:
+            s = tokens.shape[1]
+            labels = jnp.roll(tokens, -1, axis=1)
+            mask = (jnp.arange(s) < s - 1)[None, :].astype(jnp.float32)
+            mask = jnp.broadcast_to(mask, (b, s))
+        if cfg.family == "encdec":
+            pe = L.sinusoidal_positions(s, cfg.d_model).astype(self.dtype)
+            x = x + pe[None]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                     (b, s))
+        x = constrain(x, ("dp", "sp", None))
+        return x, positions, mask, labels
+
+    def _dense_layer_fwd(self, p_l, x, positions, *, shared_cfg=None):
+        cfg = self.cfg
+        h = L.apply_norm(p_l["ln1"], x, cfg.norm)
+        a, _ = L.apply_attention(p_l["attn"], h, cfg, positions,
+                                 use_kernel=self.use_kernel)
+        x = x + a
+        h = L.apply_norm(p_l["ln2"], x, cfg.norm)
+        if "moe" in p_l:
+            m, aux = MOE.apply_moe(p_l["moe"], h, cfg)
+        else:
+            m, aux = L.apply_mlp(p_l["mlp"], h, cfg), jnp.zeros((), jnp.float32)
+        x = x + m
+        x = constrain(x, ("dp", "sp", None))
+        return x, aux
+
+    def _ssm_layer_fwd(self, p_l, x):
+        cfg = self.cfg
+        h = L.apply_norm(p_l["ln"], x, cfg.norm)
+        y = M.apply_ssm(p_l["ssm"], h, cfg, use_kernel=self.use_kernel)
+        x = x + y
+        x = constrain(x, ("dp", "sp", None))
+        return x
+
+    def _encoder(self, params, enc_embeds):
+        cfg = self.cfg
+        x = enc_embeds.astype(self.dtype)
+        pe = L.sinusoidal_positions(x.shape[1], cfg.d_model).astype(self.dtype)
+        x = x + pe[None]
+        positions = jnp.broadcast_to(
+            jnp.arange(x.shape[1], dtype=jnp.int32)[None], x.shape[:2])
+
+        def layer(x, p_l):
+            h = L.apply_norm(p_l["ln1"], x, cfg.norm)
+            a, _ = L.apply_attention(p_l["attn"], h, cfg, positions,
+                                     causal=False)
+            x = x + a
+            h = L.apply_norm(p_l["ln2"], x, cfg.norm)
+            x = x + L.apply_mlp(p_l["mlp"], h, cfg)
+            return constrain(x, ("dp", "sp", None)), None
+
+        x, _ = lax.scan(_maybe_remat(layer, cfg), x, params["enc_layers"])
+        return L.apply_norm(params["enc_norm"], x, cfg.norm)
+
+    def forward(self, params, batch):
+        """Training/teacher-forcing forward.  Returns (logits, aux_loss)."""
+        cfg = self.cfg
+        x, positions, mask, labels = self._embed_inputs(params, batch)
+
+        if cfg.family in ("dense", "moe", "vlm"):
+            def layer(x, p_l):
+                x, aux = self._dense_layer_fwd(p_l, x, positions)
+                return x, aux
+            x, auxs = lax.scan(_maybe_remat(layer, cfg), x, params["layers"])
+            aux = jnp.sum(auxs)
+        elif cfg.family == "ssm":
+            def layer(x, p_l):
+                return self._ssm_layer_fwd(p_l, x), None
+            x, _ = lax.scan(_maybe_remat(layer, cfg), x, params["layers"])
+            aux = jnp.zeros((), jnp.float32)
+        elif cfg.family == "hybrid":
+            period = cfg.hybrid_period
+            n_groups = cfg.num_layers // period
+            grouped = jax.tree.map(
+                lambda a: a.reshape((n_groups, period) + a.shape[1:]),
+                params["layers"])
+
+            def group(x, p_g):
+                def inner(x, p_l):
+                    return self._ssm_layer_fwd(p_l, x), None
+                x, _ = lax.scan(inner, x, p_g)
+                x, _ = self._dense_layer_fwd(params["shared"], x, positions)
+                return x, None
+            x, _ = lax.scan(_maybe_remat(group, cfg), x, grouped)
+            aux = jnp.zeros((), jnp.float32)
+        elif cfg.family == "encdec":
+            enc_out = self._encoder(params, batch["encoder_embeds"])
+            def layer(x, p_l):
+                h = L.apply_norm(p_l["ln1"], x, cfg.norm)
+                a, _ = L.apply_attention(p_l["attn"], h, cfg, positions)
+                x = x + a
+                h = L.apply_norm(p_l["lnx"], x, cfg.norm)
+                ck, cv = L.cross_kv(p_l["cross"], enc_out, cfg)
+                x = x + L.apply_cross_attention(p_l["cross"], h, cfg, ck, cv)
+                h = L.apply_norm(p_l["ln2"], x, cfg.norm)
+                x = x + L.apply_mlp(p_l["mlp"], h, cfg)
+                return constrain(x, ("dp", "sp", None)), None
+            x, _ = lax.scan(_maybe_remat(layer, cfg), x, params["layers"])
+            aux = jnp.zeros((), jnp.float32)
+        else:
+            raise ValueError(cfg.family)
+
+        x = L.apply_norm(params["final_norm"], x, cfg.norm)
+        logits = L.apply_unembed(params["embed"], x, cfg)
+        logits = constrain(logits, ("dp", "sp", "vocab"))
+        return logits, (aux, mask, labels)
+
+    def loss(self, params, batch):
+        logits, (aux, mask, labels) = self.forward(params, batch)
+        lf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+        nll = (lse - ll) * mask
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        ce = jnp.sum(nll) / denom
+        total = ce + 0.01 * aux
+        return total, {"ce": ce, "aux": aux, "tokens": denom}
+
+    # -------------------------------------------------------------- cache
+    def init_cache(self, batch_size: int, max_len: int, enc_len: int = 0):
+        cfg = self.cfg
+        g, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        dt = self.dtype
+        c: Params = {"len": jnp.zeros((), jnp.int32)}
+        if cfg.family in ("dense", "moe", "vlm"):
+            c["k"] = jnp.zeros((cfg.num_layers, batch_size, max_len, g, hd), dt)
+            c["v"] = jnp.zeros_like(c["k"])
+        elif cfg.family == "ssm":
+            sc = M.init_ssm_cache(cfg, batch_size)
+            c["ssm"] = jax.tree.map(
+                lambda a: jnp.zeros((cfg.num_layers,) + a.shape, a.dtype), sc)
+        elif cfg.family == "hybrid":
+            sc = M.init_ssm_cache(cfg, batch_size)
+            c["ssm"] = jax.tree.map(
+                lambda a: jnp.zeros((cfg.num_layers,) + a.shape, a.dtype), sc)
+            n_apps = cfg.num_layers // cfg.hybrid_period
+            c["k"] = jnp.zeros((n_apps, batch_size, max_len, g, hd), dt)
+            c["v"] = jnp.zeros_like(c["k"])
+        elif cfg.family == "encdec":
+            c["k"] = jnp.zeros((cfg.num_layers, batch_size, max_len, g, hd), dt)
+            c["v"] = jnp.zeros_like(c["k"])
+            c["ck"] = jnp.zeros((cfg.num_layers, batch_size,
+                                 enc_len or cfg.encoder_seq, g, hd), dt)
+            c["cv"] = jnp.zeros_like(c["ck"])
+        return c
+
+    def cache_specs(self):
+        cfg = self.cfg
+        kv = (None, "dp", "kv_seq", "tp_kv", None)
+        c: Params = {"len": None}
+        if cfg.family in ("dense", "moe", "vlm", "encdec"):
+            c["k"] = kv
+            c["v"] = kv
+        if cfg.family == "encdec":
+            c["ck"] = kv
+            c["cv"] = kv
+        if cfg.family in ("ssm", "hybrid"):
+            sc = M.spec_ssm_cache(cfg)
+            c["ssm"] = jax.tree.map(lambda s: (None,) + tuple(s), sc,
+                                    is_leaf=lambda x: type(x) is tuple)
+        if cfg.family == "hybrid":
+            c["k"] = kv
+            c["v"] = kv
+        return c
+
+    # ------------------------------------------------------------ prefill
+    def prefill(self, params, batch, max_len: int):
+        """Process the full prompt; returns (cache, last-token logits)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        x, positions, _, _ = self._embed_inputs(params, batch)
+        s = x.shape[1]
+        cache = self.init_cache(b, max_len,
+                                enc_len=cfg.encoder_seq or 0)
+
+        def pad_kv(k):  # (B,S,G,hd) -> (B,max_len,G,hd)
+            pad = max_len - s
+            return jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else k
+
+        if cfg.family in ("dense", "moe", "vlm"):
+            def layer(x, p_l):
+                h = L.apply_norm(p_l["ln1"], x, cfg.norm)
+                a, (k, v) = L.apply_attention(p_l["attn"], h, cfg, positions,
+                                              use_kernel=self.use_kernel)
+                x = x + a
+                h = L.apply_norm(p_l["ln2"], x, cfg.norm)
+                if "moe" in p_l:
+                    m, _ = MOE.apply_moe(p_l["moe"], h, cfg)
+                else:
+                    m = L.apply_mlp(p_l["mlp"], h, cfg)
+                x = constrain(x + m, ("dp", "sp", None))
+                return x, (pad_kv(k.astype(self.dtype)),
+                           pad_kv(v.astype(self.dtype)))
+            x, (ks, vs) = lax.scan(_maybe_remat(layer, cfg), x,
+                                   params["layers"])
+            cache["k"], cache["v"] = ks, vs
+        elif cfg.family == "ssm":
+            def layer(x, p_l):
+                h = L.apply_norm(p_l["ln"], x, cfg.norm)
+                y, st = M.apply_ssm_prefill(p_l["ssm"], h, cfg)
+                return constrain(x + y, ("dp", "sp", None)), st
+            x, sts = lax.scan(_maybe_remat(layer, cfg), x, params["layers"])
+            cache["ssm"] = sts
+        elif cfg.family == "hybrid":
+            period = cfg.hybrid_period
+            n_groups = cfg.num_layers // period
+            grouped = jax.tree.map(
+                lambda a: a.reshape((n_groups, period) + a.shape[1:]),
+                params["layers"])
+
+            def group(x, p_g):
+                def inner(x, p_l):
+                    h = L.apply_norm(p_l["ln"], x, cfg.norm)
+                    y, st = M.apply_ssm_prefill(p_l["ssm"], h, cfg)
+                    return constrain(x + y, ("dp", "sp", None)), st
+                x, sts = lax.scan(inner, x, p_g)
+                sh = params["shared"]
+                h = L.apply_norm(sh["ln1"], x, cfg.norm)
+                a, (k, v) = L.apply_attention(sh["attn"], h, cfg, positions)
+                x = x + a
+                h = L.apply_norm(sh["ln2"], x, cfg.norm)
+                x = constrain(x + L.apply_mlp(sh["mlp"], h, cfg),
+                              ("dp", "sp", None))
+                return x, (sts, pad_kv(k.astype(self.dtype)),
+                           pad_kv(v.astype(self.dtype)))
+            x, (sts, ks, vs) = lax.scan(_maybe_remat(group, cfg), x, grouped)
+            cache["ssm"] = jax.tree.map(
+                lambda a: a.reshape((cfg.num_layers,) + a.shape[2:]), sts)
+            cache["k"], cache["v"] = ks, vs
+        elif cfg.family == "encdec":
+            enc_out = self._encoder(params, batch["encoder_embeds"])
+            def layer(x, p_l):
+                h = L.apply_norm(p_l["ln1"], x, cfg.norm)
+                a, (k, v) = L.apply_attention(p_l["attn"], h, cfg, positions)
+                x = x + a
+                h = L.apply_norm(p_l["lnx"], x, cfg.norm)
+                ck, cv = L.cross_kv(p_l["cross"], enc_out, cfg)
+                x = x + L.apply_cross_attention(p_l["cross"], h, cfg, ck, cv)
+                h = L.apply_norm(p_l["ln2"], x, cfg.norm)
+                x = constrain(x + L.apply_mlp(p_l["mlp"], h, cfg),
+                              ("dp", "sp", None))
+                return x, (pad_kv(k.astype(self.dtype)),
+                           pad_kv(v.astype(self.dtype)),
+                           ck.astype(self.dtype), cv.astype(self.dtype))
+            x, (ks, vs, cks, cvs) = lax.scan(_maybe_remat(layer, cfg), x,
+                                             params["layers"])
+            cache["k"], cache["v"] = ks, vs
+            cache["ck"], cache["cv"] = cks, cvs
+
+        cache["len"] = jnp.asarray(s, jnp.int32)
+        x = L.apply_norm(params["final_norm"], x, cfg.norm)
+        last = x[:, -1:, :]
+        logits = L.apply_unembed(params["embed"], last, cfg)
+        return cache, logits[:, 0, :]
+
+    # ------------------------------------------------------------- decode
+    def decode(self, params, cache, tokens):
+        """One decode step. tokens: (B, 1) -> (new_cache, logits (B, V))."""
+        cfg = self.cfg
+        pos = cache["len"]
+        x = L.apply_embed(params["embed"], tokens, cfg)
+        if cfg.family == "encdec":
+            pe = L.sinusoidal_positions(8192, cfg.d_model).astype(self.dtype)
+            x = x + lax.dynamic_slice_in_dim(pe, pos, 1, axis=0)[None]
+        x = constrain(x, ("dp", None, None))
+
+        if cfg.family in ("dense", "moe", "vlm"):
+            def layer(x, inp):
+                p_l, kc, vc = inp
+                h = L.apply_norm(p_l["ln1"], x, cfg.norm)
+                a, (kc, vc) = L.apply_attention_decode(p_l["attn"], h, cfg,
+                                                       kc, vc, pos)
+                x = x + a
+                h = L.apply_norm(p_l["ln2"], x, cfg.norm)
+                if "moe" in p_l:
+                    m, _ = MOE.apply_moe(p_l["moe"], h, cfg)
+                else:
+                    m = L.apply_mlp(p_l["mlp"], h, cfg)
+                return x + m, (kc, vc)
+            x, (ks, vs) = lax.scan(layer, x,
+                                   (params["layers"], cache["k"], cache["v"]))
+            cache = dict(cache, k=ks, v=vs)
+        elif cfg.family == "ssm":
+            def layer(x, inp):
+                p_l, sc = inp
+                h = L.apply_norm(p_l["ln"], x, cfg.norm)
+                y, sc = M.apply_ssm_decode(p_l["ssm"], h, cfg, sc)
+                return x + y, sc
+            x, sts = lax.scan(layer, x, (params["layers"], cache["ssm"]))
+            cache = dict(cache, ssm=sts)
+        elif cfg.family == "hybrid":
+            period = cfg.hybrid_period
+            n_groups = cfg.num_layers // period
+            grouped = jax.tree.map(
+                lambda a: a.reshape((n_groups, period) + a.shape[1:]),
+                params["layers"])
+            g_ssm = jax.tree.map(
+                lambda a: a.reshape((n_groups, period) + a.shape[1:]),
+                cache["ssm"])
+
+            def group(x, inp):
+                p_g, sc_g, kc, vc = inp
+                def inner(x, inp2):
+                    p_l, sc = inp2
+                    h = L.apply_norm(p_l["ln"], x, cfg.norm)
+                    y, sc = M.apply_ssm_decode(p_l["ssm"], h, cfg, sc)
+                    return x + y, sc
+                x, sc_g = lax.scan(inner, x, (p_g, sc_g))
+                sh = params["shared"]
+                h = L.apply_norm(sh["ln1"], x, cfg.norm)
+                a, (kc, vc) = L.apply_attention_decode(sh["attn"], h, cfg,
+                                                       kc, vc, pos)
+                x = x + a
+                h = L.apply_norm(sh["ln2"], x, cfg.norm)
+                x = x + L.apply_mlp(sh["mlp"], h, cfg)
+                return x, (sc_g, kc, vc)
+            x, (sts, ks, vs) = lax.scan(group, x,
+                                        (grouped, g_ssm, cache["k"],
+                                         cache["v"]))
+            cache = dict(cache,
+                         ssm=jax.tree.map(
+                             lambda a: a.reshape((cfg.num_layers,)
+                                                 + a.shape[2:]), sts),
+                         k=ks, v=vs)
+        elif cfg.family == "encdec":
+            def layer(x, inp):
+                p_l, kc, vc, ck, cv = inp
+                h = L.apply_norm(p_l["ln1"], x, cfg.norm)
+                a, (kc, vc) = L.apply_attention_decode(p_l["attn"], h, cfg,
+                                                       kc, vc, pos)
+                x = x + a
+                h = L.apply_norm(p_l["lnx"], x, cfg.norm)
+                x = x + L.apply_cross_attention(
+                    p_l["cross"], h, cfg, ck.astype(x.dtype),
+                    cv.astype(x.dtype))
+                h = L.apply_norm(p_l["ln2"], x, cfg.norm)
+                x = x + L.apply_mlp(p_l["mlp"], h, cfg)
+                return x, (kc, vc)
+            x, (ks, vs) = lax.scan(layer, x,
+                                   (params["layers"], cache["k"], cache["v"],
+                                    cache["ck"], cache["cv"]))
+            cache = dict(cache, k=ks, v=vs)
+
+        cache["len"] = pos + 1
+        x = L.apply_norm(params["final_norm"], x, cfg.norm)
+        logits = L.apply_unembed(params["embed"], x, cfg)
+        return cache, logits[:, 0, :]
+
+
+def build_model(cfg, use_kernel: bool = False) -> Model:
+    return Model(cfg, use_kernel=use_kernel)

@@ -1,0 +1,258 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) layer.
+
+Training/prefill uses the chunked SSD algorithm as a ``lax.scan`` over
+chunks (O(S·Q) memory); decode is the O(1) state recurrence.  The
+perf-critical chunk kernel has a Pallas TPU implementation in
+``repro.kernels.ssd_scan`` (selected with ``use_kernel=True``); this module
+is the pure-XLA baseline and the decode path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import _dense_init, cast
+
+
+def dims(cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    din = s.d_inner(d)
+    nh = s.n_heads(d)
+    return din, nh, s.d_state, s.n_groups, s.head_dim, s.d_conv, s.chunk_size
+
+
+def init_ssm(key, cfg):
+    din, nh, ns, ng, hp, dc, _ = dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    p = {
+        "in_z": _dense_init(ks[0], (d, din)),
+        "in_x": _dense_init(ks[1], (d, din)),
+        "in_B": _dense_init(ks[2], (d, ng * ns)),
+        "in_C": _dense_init(ks[3], (d, ng * ns)),
+        "in_dt": _dense_init(ks[4], (d, nh)),
+        "conv_x": jax.random.normal(ks[5], (dc, din), jnp.float32) * 0.1,
+        "conv_B": jax.random.normal(ks[5], (dc, ng * ns), jnp.float32) * 0.1,
+        "conv_C": jax.random.normal(ks[5], (dc, ng * ns), jnp.float32) * 0.1,
+        "conv_bias": jnp.zeros((din + 2 * ng * ns,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((nh,), 1e-2, jnp.float32))),
+        "norm_scale": jnp.ones((din,), jnp.float32),
+        "out": _dense_init(ks[6], (din, d)),
+    }
+    return p
+
+
+def spec_ssm(cfg):
+    return {
+        "in_z": ("fsdp", "tp"), "in_x": ("fsdp", "tp"),
+        "in_B": ("fsdp", None), "in_C": ("fsdp", None),
+        "in_dt": ("fsdp", None),
+        "conv_x": (None, "tp"), "conv_B": (None, None), "conv_C": (None, None),
+        "conv_bias": (None,),
+        "A_log": (None,), "D": (None,), "dt_bias": (None,),
+        "norm_scale": ("tp",),
+        "out": ("tp", "fsdp"),
+    }
+
+
+def _causal_conv(x, w, b):
+    """x: (B, S, C); w: (K, C); depthwise causal conv + bias."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    y = sum(xp[:, i:i + x.shape[1], :] * cast(w[i], x.dtype) for i in range(k))
+    return y + cast(b, x.dtype)
+
+
+def _gated_norm(y, z, scale, eps=1e-5):
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return (yf * lax.rsqrt(var + eps) * scale).astype(y.dtype)
+
+
+def _heads_bc(t, nh, ng):
+    """(B,S,G,N) -> broadcast groups to heads -> (B,S,H,N)."""
+    if ng == nh:
+        return t
+    rep = nh // ng
+    b, s, g, n = t.shape
+    return jnp.broadcast_to(t[:, :, :, None, :], (b, s, g, rep, n)) \
+              .reshape(b, s, nh, n)
+
+
+def ssd_chunked(xh, dt, A, Bh, Ch, chunk):
+    """Chunked SSD scan (pure XLA baseline).
+
+    xh: (B,S,H,P); dt: (B,S,H) f32 (post-softplus); A: (H,) f32 (negative);
+    Bh, Ch: (B,S,H,N).  Returns y: (B,S,H,P) and final state (B,H,P,N).
+    """
+    b, s0, h, p = xh.shape
+    n = Bh.shape[-1]
+    # pad S to a chunk multiple with dt=0 (identity state transition: the
+    # padded steps neither decay the state nor inject input)
+    s = ((s0 + chunk - 1) // chunk) * chunk
+    if s != s0:
+        pad = ((0, 0), (0, s - s0), (0, 0), (0, 0))
+        xh = jnp.pad(xh, pad)
+        Bh = jnp.pad(Bh, pad)
+        Ch = jnp.pad(Ch, pad)
+        dt = jnp.pad(dt, ((0, 0), (0, s - s0), (0, 0)))
+    nc = s // chunk
+    dtype = xh.dtype
+
+    def reshape_c(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:])
+
+    xc, dtc = reshape_c(xh), reshape_c(dt)
+    Bc, Cc = reshape_c(Bh), reshape_c(Ch)
+    Adt = dtc * A[None, None, None, :]                     # (B,nc,Q,H) ≤ 0
+
+    def body(hstate, inp):
+        xq, dtq, Aq, Bq, Cq = inp                          # (B,Q,...)
+        cum = jnp.cumsum(Aq, axis=1)                       # (B,Q,H)
+        # intra-chunk (dual / attention-like form).  The (Q,Q,H) tiles are
+        # kept in the compute dtype (bf16 in training): decays are <= 1 so
+        # bf16 is safe, and these tiles never leave VMEM in the Pallas
+        # kernel — f32 here would double their HBM traffic in the XLA path
+        # (EXPERIMENTS.md §Perf, mamba2 iteration 3).
+        L = cum[:, :, None, :] - cum[:, None, :, :]        # (B,Q,Q,H) i from j
+        iq = jnp.arange(chunk)
+        causal = (iq[:, None] >= iq[None, :])[None, :, :, None]
+        L = jnp.where(causal, jnp.exp(L), 0.0).astype(dtype)
+        CB = jnp.einsum("bihn,bjhn->bijh", Cq, Bq)         # compute dtype
+        M = CB * L * dtq[:, None, :, :].astype(dtype)      # (B,Q,Q,H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", M, xq)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bqhn,bhpn->bqhp",
+                             (Cq.astype(jnp.float32)
+                              * jnp.exp(cum)[..., None]).astype(dtype),
+                             hstate.astype(dtype))
+        # new chunk state
+        last = cum[:, -1:, :]                              # (B,1,H)
+        decay = jnp.exp(last - cum)                        # (B,Q,H)
+        Sc = jnp.einsum("bqhn,bqhp->bhpn",
+                        (Bq.astype(jnp.float32) * (decay * dtq)[..., None]
+                         ).astype(dtype), xq)
+        h_new = (jnp.exp(last[:, 0, :])[:, :, None, None]
+                 * hstate + Sc.astype(jnp.float32))
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    # remat the chunk body: without it the scan linearization stacks every
+    # per-chunk (Q,Q,H) tile for the backward pass — the dominant HBM
+    # traffic of the dp-sharded mamba2 cell (EXPERIMENTS.md §Perf, iter 4)
+    hT, yc = lax.scan(jax.checkpoint(body), h0,
+                      (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dtc, 1, 0),
+                       jnp.moveaxis(Adt, 1, 0), jnp.moveaxis(Bc, 1, 0),
+                       jnp.moveaxis(Cc, 1, 0)))
+    y = jnp.moveaxis(yc, 0, 1).reshape(b, s, h, p)
+    return y[:, :s0], hT
+
+
+def _ssm_fwd(p, x, cfg, use_kernel=False, want_state=False):
+    din, nh, ns, ng, hp, dc, chunk = dims(cfg)
+    b, s, d = x.shape
+    dtype = x.dtype
+    z = jnp.einsum("bsd,de->bse", x, cast(p["in_z"], dtype))
+    xi = jnp.einsum("bsd,de->bse", x, cast(p["in_x"], dtype))
+    Bi = jnp.einsum("bsd,de->bse", x, cast(p["in_B"], dtype))
+    Ci = jnp.einsum("bsd,de->bse", x, cast(p["in_C"], dtype))
+    dt = jnp.einsum("bsd,dh->bsh", x, cast(p["in_dt"], dtype))
+
+    conv_tail = None
+    if want_state:  # pre-conv tail feeds the decode-time conv window
+        conv_tail = jnp.concatenate([xi, Bi, Ci], axis=-1)[:, -(dc - 1):, :]
+
+    cb = p["conv_bias"]
+    xi = jax.nn.silu(_causal_conv(xi, p["conv_x"], cb[:din]))
+    Bi = jax.nn.silu(_causal_conv(Bi, p["conv_B"], cb[din:din + ng * ns]))
+    Ci = jax.nn.silu(_causal_conv(Ci, p["conv_C"], cb[din + ng * ns:]))
+
+    A = -jnp.exp(p["A_log"])                                # (H,) < 0
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    xh = xi.reshape(b, s, nh, hp)
+    Bh = _heads_bc(Bi.reshape(b, s, ng, ns), nh, ng)
+    Ch = _heads_bc(Ci.reshape(b, s, ng, ns), nh, ng)
+
+    if use_kernel and not want_state:
+        from repro.kernels.ssd_scan import ops as ssd_ops
+        y = ssd_ops.ssd(xh, dtf, A, Bh, Ch, chunk)
+        hT = None
+    else:
+        y, hT = ssd_chunked(xh, dtf, A, Bh, Ch, chunk)
+    y = y + xh * cast(p["D"], dtype)[None, None, :, None]
+    y = y.reshape(b, s, din)
+    y = _gated_norm(y, z, p["norm_scale"])
+    out = jnp.einsum("bse,ed->bsd", y, cast(p["out"], dtype))
+    if want_state:
+        return out, {"conv": conv_tail.astype(jnp.float32), "state": hT}
+    return out
+
+
+def apply_ssm(p, x, cfg, use_kernel=False):
+    """Full-sequence Mamba-2 mixer.  x: (B,S,D) -> (B,S,D)."""
+    return _ssm_fwd(p, x, cfg, use_kernel=use_kernel, want_state=False)
+
+
+def apply_ssm_prefill(p, x, cfg):
+    """Like apply_ssm but also returns the decode cache {'conv','state'}."""
+    return _ssm_fwd(p, x, cfg, want_state=True)
+
+
+# ---------------------------------------------------------------------------
+# decode
+
+
+def init_ssm_cache(cfg, batch, dtype=jnp.float32):
+    din, nh, ns, ng, hp, dc, _ = dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, dc - 1, din + 2 * ng * ns), dtype),
+        "state": jnp.zeros((batch, nh, hp, ns), jnp.float32),
+    }
+
+
+def spec_ssm_cache(cfg):
+    return {"conv": ("dp", None, None), "state": ("dp", "tp", None, None)}
+
+
+def apply_ssm_decode(p, x, cfg, cache):
+    """x: (B,1,D); cache: {'conv': (B,K-1,C), 'state': (B,H,P,N)}."""
+    din, nh, ns, ng, hp, dc, _ = dims(cfg)
+    b = x.shape[0]
+    dtype = x.dtype
+    z = jnp.einsum("bsd,de->bse", x, cast(p["in_z"], dtype))
+    xi = jnp.einsum("bsd,de->bse", x, cast(p["in_x"], dtype))
+    Bi = jnp.einsum("bsd,de->bse", x, cast(p["in_B"], dtype))
+    Ci = jnp.einsum("bsd,de->bse", x, cast(p["in_C"], dtype))
+    dt = jnp.einsum("bsd,dh->bsh", x, cast(p["in_dt"], dtype))
+
+    new_col = jnp.concatenate([xi, Bi, Ci], axis=-1)        # (B,1,C)
+    window = jnp.concatenate([cache["conv"].astype(dtype), new_col], axis=1)
+    conv_w = jnp.concatenate([p["conv_x"], p["conv_B"], p["conv_C"]], axis=1)
+    conv = jnp.einsum("bkc,kc->bc", window, cast(conv_w, dtype)) \
+        + cast(p["conv_bias"], dtype)
+    conv = jax.nn.silu(conv)
+    xi = conv[:, :din]
+    Bi = conv[:, din:din + ng * ns]
+    Ci = conv[:, din + ng * ns:]
+    new_conv_cache = window[:, 1:, :].astype(cache["conv"].dtype)
+
+    A = -jnp.exp(p["A_log"])
+    dtf = jax.nn.softplus(dt[:, 0, :].astype(jnp.float32) + p["dt_bias"])
+    xh = xi.reshape(b, nh, hp).astype(jnp.float32)
+    Bh = _heads_bc(Bi.reshape(b, 1, ng, ns), nh, ng)[:, 0].astype(jnp.float32)
+    Ch = _heads_bc(Ci.reshape(b, 1, ng, ns), nh, ng)[:, 0].astype(jnp.float32)
+
+    decay = jnp.exp(dtf * A[None, :])                       # (B,H)
+    h_new = (cache["state"] * decay[:, :, None, None]
+             + jnp.einsum("bhn,bhp->bhpn", Bh * dtf[..., None], xh))
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, h_new)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(b, 1, din).astype(dtype)
+    y = _gated_norm(y, z, p["norm_scale"])
+    out = jnp.einsum("bse,ed->bsd", y, cast(p["out"], dtype))
+    return out, {"conv": new_conv_cache, "state": h_new}

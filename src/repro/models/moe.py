@@ -1,0 +1,206 @@
+"""Mixture-of-Experts layer (GShard-style einsum dispatch, EP over `tp`).
+
+Baseline path: capacity-bounded one-hot dispatch/combine einsums — fully
+pjit-shardable (experts over the `tp` axis, token groups over `dp`).  The
+beyond-paper optimized path (sorted grouped-GEMM dispatch) lives in
+``moe_grouped.py`` and is selected by ``dispatch="grouped"``.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init, cast
+
+
+def init_moe(key, cfg):
+    e = cfg.moe
+    d, f, E = cfg.d_model, e.d_ff_expert, e.num_experts
+    ks = jax.random.split(key, 5)
+    p = {"router": _dense_init(ks[0], (d, E))}
+    if cfg.act == "swiglu":
+        p["wi"] = _dense_init(ks[1], (E, d, f))
+        p["wg"] = _dense_init(ks[2], (E, d, f))
+        p["wo"] = _dense_init(ks[3], (E, f, d))
+    else:
+        p["wi"] = _dense_init(ks[1], (E, d, f))
+        p["wo"] = _dense_init(ks[3], (E, f, d))
+    if e.n_shared_experts:
+        fs = e.n_shared_experts * f
+        p["shared"] = {"wi": _dense_init(ks[4], (d, fs)),
+                       "wg": _dense_init(ks[4], (d, fs)),
+                       "wo": _dense_init(ks[4], (fs, d))}
+    return p
+
+
+def spec_moe(cfg):
+    e = cfg.moe
+    p = {"router": (None, None)}
+    if cfg.act == "swiglu":
+        p["wi"] = ("ep", "fsdp", None)
+        p["wg"] = ("ep", "fsdp", None)
+        p["wo"] = ("ep", None, "fsdp")
+    else:
+        p["wi"] = ("ep", "fsdp", None)
+        p["wo"] = ("ep", None, "fsdp")
+    if e.n_shared_experts:
+        p["shared"] = {"wi": ("fsdp", "tp"), "wg": ("fsdp", "tp"),
+                       "wo": ("tp", "fsdp")}
+    return p
+
+
+def capacity(cfg, tokens_per_group: int) -> int:
+    e = cfg.moe
+    c = int(math.ceil(tokens_per_group * e.top_k * e.capacity_factor
+                      / e.num_experts))
+    return max(c, 1)
+
+
+def _topk_dispatch(gates, top_k, cap):
+    """gates: (G, S, E) f32.  Returns dispatch (G,S,E,C) bool-ish bf16 and
+    combine (G,S,E,C) f32 plus aux losses."""
+    g, s, e = gates.shape
+    probs = jax.nn.softmax(gates, axis=-1)
+    # iterative top-k with capacity accounting (GShard style)
+    remaining = probs
+    dispatch = jnp.zeros((g, s, e, cap), jnp.bool_)
+    combine = jnp.zeros((g, s, e, cap), jnp.float32)
+    # position counters via cumulative sum of selections, built per k
+    sel_so_far = jnp.zeros((g, s, e), jnp.int32)  # 1 if token->expert chosen
+    for _ in range(top_k):
+        idx = jnp.argmax(remaining, axis=-1)                     # (G,S)
+        onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)          # (G,S,E)
+        # position of each token within its expert queue: all slots consumed
+        # by earlier k-iterations (over *all* tokens) come first, then tokens
+        # before s within this iteration.
+        count_prev = jnp.sum(sel_so_far, axis=1, keepdims=True)  # (G,1,E)
+        pos = jnp.cumsum(onehot, axis=1) - 1 + count_prev         # (G,S,E)
+        pos = jnp.sum(pos * onehot, axis=-1)                      # (G,S)
+        keep = pos < cap
+        w = jnp.sum(probs * onehot, axis=-1) * keep               # (G,S)
+        poh = jax.nn.one_hot(pos, cap, dtype=jnp.float32) * keep[..., None]
+        d_k = (onehot[..., None].astype(jnp.float32)
+               * poh[:, :, None, :])                              # (G,S,E,C)
+        dispatch = jnp.logical_or(dispatch, d_k > 0)
+        combine = combine + d_k * w[..., None, None]
+        sel_so_far = sel_so_far + onehot
+        remaining = remaining * (1.0 - onehot.astype(remaining.dtype))
+    # load-balancing aux loss (Switch-style)
+    me = jnp.mean(probs, axis=1)                                  # (G,E)
+    ce = jnp.mean(sel_so_far.astype(jnp.float32) / max(1, top_k), axis=1)
+    aux = jnp.mean(jnp.sum(me * ce, axis=-1)) * e
+    return dispatch, combine, aux
+
+
+def apply_moe(p, x, cfg):
+    """x: (B, S, D) -> (B, S, D). Groups = batch dim."""
+    if getattr(cfg, "moe_impl", "einsum") == "scatter":
+        return apply_moe_scatter(p, x, cfg)
+    e = cfg.moe
+    b, s, d = x.shape
+    dtype = x.dtype
+    cap = capacity(cfg, s)
+    gates = jnp.einsum("gsd,de->gse", x, cast(p["router"], dtype)
+                       ).astype(jnp.float32)
+    dispatch, combine, aux = _topk_dispatch(gates, e.top_k, cap)
+    disp = dispatch.astype(dtype)
+    xe = jnp.einsum("gsec,gsd->gecd", disp, x)                   # (G,E,C,D)
+    h = jnp.einsum("gecd,edf->gecf", xe, cast(p["wi"], dtype))
+    if cfg.act == "swiglu":
+        gg = jnp.einsum("gecd,edf->gecf", xe, cast(p["wg"], dtype))
+        h = jax.nn.silu(gg) * h
+    else:
+        h = jax.nn.gelu(h)
+    ye = jnp.einsum("gecf,efd->gecd", h, cast(p["wo"], dtype))
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(dtype), ye)
+    if e.n_shared_experts:
+        sp = p["shared"]
+        hs = jnp.einsum("bsd,df->bsf", x, cast(sp["wi"], dtype))
+        gs = jnp.einsum("bsd,df->bsf", x, cast(sp["wg"], dtype))
+        y = y + jnp.einsum("bsf,fd->bsd", jax.nn.silu(gs) * hs,
+                           cast(sp["wo"], dtype))
+    return y, aux
+
+
+def apply_moe_scatter(p, x, cfg):
+    """Sorted grouped-GEMM dispatch (beyond-paper perf path, §Perf).
+
+    The einsum path pays 2·S·(E_loc·C)·D dispatch+combine dot flops per
+    group per layer — ~64% of qwen3-moe's total HLO flops.  Here routing
+    is argsort + gather/scatter (O(S·k·D) data movement, no dot flops);
+    expert GEMMs are unchanged.  Token order within an expert differs from
+    the einsum path (sort order vs. GShard k-round priority), so capacity
+    drops may differ at the margin — both are valid MoE semantics.
+    """
+    e = cfg.moe
+    b, s, d = x.shape
+    dtype = x.dtype
+    k = e.top_k
+    cap = capacity(cfg, s)
+    E = e.num_experts
+    gates = jnp.einsum("gsd,de->gse", x, cast(p["router"], dtype)
+                       ).astype(jnp.float32)
+    probs = jax.nn.softmax(gates, axis=-1)                  # (B,S,E)
+    w, idx = jax.lax.top_k(probs, k)                        # (B,S,k)
+    sk = s * k
+    eid = idx.reshape(b, sk)                                # expert per slot
+    wgt = w.reshape(b, sk)
+    tok = jnp.broadcast_to((jnp.arange(sk) // k)[None], (b, sk))  # token ix
+
+    order = jnp.argsort(eid, axis=1, stable=True)           # (B,S*k)
+    eid_s = jnp.take_along_axis(eid, order, axis=1)
+    tok_s = jnp.take_along_axis(tok, order, axis=1)
+    # position within expert: arange - start offset of the expert
+    counts = jnp.sum(jax.nn.one_hot(eid, E, dtype=jnp.int32), axis=1)
+    starts = jnp.cumsum(counts, axis=1) - counts             # (B,E) exclusive
+    pos = jnp.arange(sk)[None] - jnp.take_along_axis(starts, eid_s, axis=1)
+    keep = pos < cap
+    dst = jnp.where(keep, eid_s * cap + pos, E * cap)        # overflow slot
+
+    from repro.sharding.specs import constrain
+    # row-wise gather/scatter via vmap: indices stay (slots,) per batch —
+    # take_along_axis would broadcast u32 indices to (B, slots, D) (45 TB
+    # of index traffic per layer at qwen3 scale; see EXPERIMENTS.md §Perf)
+    x_s = jax.vmap(lambda xb, ib: jnp.take(xb, ib, axis=0))(x, tok_s)
+    x_s = constrain(x_s, ("dp", None, None))
+    buf = jnp.zeros((b, E * cap + 1, d), dtype)
+    buf = jax.vmap(lambda bb, db, vb: bb.at[db].set(vb))(buf, dst, x_s)
+    buf = constrain(buf, ("dp", None, None))  # scatter stays batch-sharded
+    xe = buf[:, :E * cap].reshape(b, E, cap, d)              # (B,E,C,D)
+    xe = constrain(xe, ("dp", "ep", None, None))
+
+    h = jnp.einsum("gecd,edf->gecf", xe, cast(p["wi"], dtype))
+    if cfg.act == "swiglu":
+        gg = jnp.einsum("gecd,edf->gecf", xe, cast(p["wg"], dtype))
+        h = jax.nn.silu(gg) * h
+    else:
+        h = jax.nn.gelu(h)
+    ye = jnp.einsum("gecf,efd->gecd", h, cast(p["wo"], dtype))
+    ye = constrain(ye, ("dp", "ep", None, None))
+    ye_flat = jnp.concatenate(
+        [ye.reshape(b, E * cap, d),
+         jnp.zeros((b, 1, d), ye.dtype)], axis=1)            # overflow = 0
+    ye_flat = constrain(ye_flat, ("dp", None, None))
+    out_s = jax.vmap(lambda yb, ib: jnp.take(yb, ib, axis=0))(ye_flat, dst)
+    w_s = jnp.take_along_axis(wgt, order, axis=1) * keep
+    out_s = out_s * w_s[..., None].astype(dtype)
+    # un-sort and reduce the k slots per token
+    y_slots = jnp.zeros((b, sk, d), dtype)
+    y_slots = jax.vmap(lambda yb, ob, vb: yb.at[ob].set(vb))(
+        y_slots, order, out_s)
+    y = jnp.sum(y_slots.reshape(b, s, k, d), axis=2)
+    y = constrain(y, ("dp", "sp", None))
+
+    me = jnp.mean(probs, axis=1)
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32),
+                          axis=2), axis=1) / k
+    aux = jnp.mean(jnp.sum(me * ce, axis=-1)) * E
+    if e.n_shared_experts:
+        sp = p["shared"]
+        hs = jnp.einsum("bsd,df->bsf", x, cast(sp["wi"], dtype))
+        gs = jnp.einsum("bsd,df->bsf", x, cast(sp["wg"], dtype))
+        y = y + jnp.einsum("bsf,fd->bsd", jax.nn.silu(gs) * hs,
+                           cast(sp["wo"], dtype))
+    return y, aux

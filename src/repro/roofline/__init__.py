@@ -1,0 +1,5 @@
+from .analysis import (collective_bytes, roofline_terms, parse_hlo_collectives,
+                       HW, model_flops)
+
+__all__ = ["collective_bytes", "roofline_terms", "parse_hlo_collectives",
+           "HW", "model_flops"]

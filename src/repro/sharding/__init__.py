@@ -1,0 +1,5 @@
+from .specs import (Rules, make_rules, resolve, tree_shardings, constrain,
+                    use_rules, active_rules)
+
+__all__ = ["Rules", "make_rules", "resolve", "tree_shardings", "constrain",
+           "use_rules", "active_rules"]

@@ -1,0 +1,191 @@
+"""Logical-axis sharding rules and resolution onto the physical mesh.
+
+Logical axes used by the model spec trees:
+  dp      — batch (data parallel), maps to ("pod","data") or ("data",)
+  fsdp    — ZeRO-style parameter shard dim
+  tp      — tensor-parallel dim (d_ff, ssm d_inner, vocab)
+  tp_kv   — attention KV-group dim (G)
+  tp_rep  — attention q-replication dim (R = H / G)
+  ep      — MoE expert dim
+  sp      — activation sequence dim (sequence parallelism / context parallel)
+  kv_seq  — decode-time KV-cache sequence dim
+
+Scheme selection per arch (see DESIGN.md §4):
+  'tp'  — Megatron-style TP when G or R divides the model-axis size.
+  'sp'  — FSDP(+model axis) + sequence parallelism when neither divides
+          (qwen2 G=2,R=7; minitron/phi/llava G=8,R=4): weights are sharded
+          over both mesh axes for storage, activations over seq; attention
+          einsums stay unsharded over heads but balanced over dp×sp.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = Dict[str, Tuple[str, ...]]
+
+
+def _spec_leaf(x):
+    return type(x) is tuple or x is None
+
+_ACTIVE: contextvars.ContextVar = contextvars.ContextVar("repro_rules",
+                                                         default=None)
+
+
+def scheme_for(cfg, tp_size: int) -> str:
+    if getattr(cfg, "force_scheme", None):
+        return cfg.force_scheme
+    if cfg.family == "ssm":
+        return "tp"
+    g, r = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    if g % tp_size == 0 or r % tp_size == 0:
+        return "tp"
+    return "sp"
+
+
+def make_rules(cfg, *, multi_pod: bool = False, mode: str = "train",
+               tp_size: int = 16, dp_size: Optional[int] = None,
+               global_batch: Optional[int] = None) -> Rules:
+    dp_axes: Tuple[str, ...] = ("pod", "data") if multi_pod else ("data",)
+    if dp_size is None:
+        dp_size = (2 * 16) if multi_pod else 16
+    if global_batch is not None and global_batch % dp_size != 0:
+        dp_axes = ()  # tiny-batch decode (e.g. long_500k B=1): replicate batch
+    sch = scheme_for(cfg, tp_size)
+    g = cfg.n_kv_heads
+    r = cfg.n_heads // max(cfg.n_kv_heads, 1)
+
+    rules: Rules = {
+        "dp": dp_axes,
+        "ep": ("model",),
+        "kv_seq": ("model",),
+        "vocab": ("model",),
+    }
+    if sch == "dp":
+        # pure data parallelism over every mesh axis: for small models TP
+        # buys nothing and each TP psum costs a (B,S,D) all-reduce per
+        # layer (EXPERIMENTS.md §Perf, mamba2 iteration 2)
+        rules["dp"] = dp_axes + ("model",)
+        if global_batch is not None and global_batch % (dp_size * tp_size):
+            rules["dp"] = dp_axes
+        rules["tp"] = ()
+        rules["tp_kv"] = ()
+        rules["tp_rep"] = ()
+        rules["sp"] = ()
+        rules["fsdp"] = ("data",) if mode == "train" else ("model",)
+    elif sch == "tp":
+        rules["tp"] = ("model",)
+        rules["tp_kv"] = ("model",) if g % tp_size == 0 else ()
+        rules["tp_rep"] = (("model",) if (g % tp_size != 0
+                                          and r % tp_size == 0) else ())
+        rules["sp"] = ()
+        rules["fsdp"] = ("data",) if mode == "train" else ()
+    else:  # 'sp' scheme
+        rules["tp"] = ()
+        rules["tp_kv"] = ()
+        rules["tp_rep"] = ()
+        rules["sp"] = ("model",)
+        rules["fsdp"] = (("data", "model") if mode == "train"
+                         else ("model",))
+    # MoE experts always shard over model; expert-internal fsdp dim follows
+    # the global fsdp rule (psum over contracting dim, no weight gather).
+    return rules
+
+
+def resolve(logical: Optional[Tuple], rules: Rules) -> P:
+    """logical: tuple of logical names / None per dim -> PartitionSpec."""
+    if logical is None:
+        return P()
+    out = []
+    used: set = set()
+    for name in logical:
+        if name is None:
+            out.append(None)
+            continue
+        axes = rules.get(name, ())
+        axes = tuple(a for a in axes if a not in used)
+        used.update(axes)
+        if len(axes) == 0:
+            out.append(None)
+        elif len(axes) == 1:
+            out.append(axes[0])
+        else:
+            out.append(axes)
+    return P(*out)
+
+
+def legalize(pspec: P, shape, mesh: Mesh) -> P:
+    """Drop mesh axes from any dim they do not divide evenly (jit rejects
+    uneven shardings for its arguments)."""
+    out = []
+    for i, entry in enumerate(pspec):
+        if entry is None or i >= len(shape):
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        while axes:
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            if shape[i] % size == 0:
+                break
+            axes = axes[:-1]
+        if len(axes) == 0:
+            out.append(None)
+        elif len(axes) == 1:
+            out.append(axes[0])
+        else:
+            out.append(tuple(axes))
+    return P(*out)
+
+
+def tree_shardings(spec_tree, mesh: Mesh, rules: Rules, abs_tree=None):
+    """Map a tree of logical specs to NamedShardings.  If ``abs_tree``
+    (matching tree of arrays/ShapeDtypeStructs) is given, every spec is
+    legalized against the leaf shape."""
+    if abs_tree is None:
+        return jax.tree.map(
+            lambda spec: NamedSharding(mesh, resolve(spec, rules)),
+            spec_tree, is_leaf=_spec_leaf)
+    spec_leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=_spec_leaf)
+    abs_leaves = treedef.flatten_up_to(abs_tree)
+    out = []
+    for spec, leaf in zip(spec_leaves, abs_leaves):
+        ps = resolve(spec, rules)
+        shape = getattr(leaf, "shape", ())
+        out.append(NamedSharding(mesh, legalize(ps, shape, mesh)))
+    return treedef.unflatten(out)
+
+
+def tree_pspecs(spec_tree, rules: Rules):
+    return jax.tree.map(
+        lambda spec: resolve(spec, rules),
+        spec_tree, is_leaf=_spec_leaf)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Rules], mesh: Optional[Mesh] = None):
+    tok = _ACTIVE.set(None if rules is None else (rules, mesh))
+    try:
+        yield
+    finally:
+        _ACTIVE.reset(tok)
+
+
+def active_rules():
+    return _ACTIVE.get()
+
+
+def constrain(x, logical: Tuple):
+    """with_sharding_constraint against the active logical rules (no-op when
+    no rules are active, e.g. single-device smoke tests)."""
+    ctx = _ACTIVE.get()
+    if ctx is None:
+        return x
+    rules, mesh = ctx
+    spec = legalize(resolve(logical, rules), x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

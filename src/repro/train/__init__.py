@@ -1,0 +1,5 @@
+from .optimizer import adamw_init, adamw_update, adafactor_init, adafactor_update
+from .step import TrainState, make_train_state, train_step, make_train_step
+
+__all__ = ["adamw_init", "adamw_update", "adafactor_init", "adafactor_update",
+           "TrainState", "make_train_state", "train_step", "make_train_step"]

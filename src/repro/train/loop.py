@@ -1,0 +1,75 @@
+"""Training loop driver: data + step + checkpoint + straggler monitor.
+
+Used by examples/train_lm.py and launch/train.py.  Restart-safe: resumes
+from the latest checkpoint and replays the data stream deterministically.
+"""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import (AsyncCheckpointer, latest_step,
+                              restore_checkpoint)
+from repro.data import DataConfig, SyntheticLM
+from repro.ft import StepTimeMonitor
+from repro.train.step import TrainState, make_train_state, make_train_step
+
+
+def train(cfg, *, steps: int, global_batch: int, seq_len: int,
+          lr: float = 3e-4, ckpt_dir: Optional[str] = None,
+          ckpt_every: int = 50, microbatches: int = 1,
+          log_every: int = 10, seed: int = 0,
+          log_fn: Callable[[str], None] = print) -> Dict:
+    """Single-process training (CPU smoke scale). Returns final metrics."""
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq_len,
+                      global_batch=global_batch, seed=seed)
+    ds = SyntheticLM(dcfg)
+    step_fn, model = make_train_step(cfg, lr=lr, microbatches=microbatches)
+    step_fn = jax.jit(step_fn, donate_argnums=(0,))
+
+    state = make_train_state(cfg, jax.random.PRNGKey(seed))
+    start = 0
+    ckpt = None
+    if ckpt_dir:
+        ckpt = AsyncCheckpointer(ckpt_dir)
+        last = latest_step(ckpt_dir)
+        if last is not None:
+            state = restore_checkpoint(ckpt_dir, last, state)
+            start = last
+            log_fn(f"[train] resumed from step {last}")
+
+    monitor = StepTimeMonitor()
+    losses = []
+    extras = {}
+    if cfg.family == "encdec":
+        extras["encoder_embeds"] = jnp.zeros(
+            (global_batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        extras["image_embeds"] = jnp.zeros(
+            (global_batch, cfg.n_image_tokens, cfg.d_model), jnp.float32)
+
+    for step in range(start, steps):
+        batch = {"tokens": jnp.asarray(ds.shard_at(step, 0, 1)), **extras}
+        t0 = time.perf_counter()
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        flagged = monitor.record(dt)
+        losses.append(loss)
+        if step % log_every == 0 or step == steps - 1:
+            log_fn(f"[train] step {step:5d} loss {loss:.4f} "
+                   f"({dt*1e3:.0f} ms{' STRAGGLER' if flagged else ''})")
+        if ckpt and (step + 1) % ckpt_every == 0:
+            ckpt.save(step + 1, state)
+    if ckpt:
+        ckpt.save(steps, state)
+        ckpt.wait()
+    return {"final_loss": losses[-1] if losses else float("nan"),
+            "first_loss": losses[0] if losses else float("nan"),
+            "losses": losses, "state": state,
+            "median_step_s": monitor.median}

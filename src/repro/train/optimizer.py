@@ -1,0 +1,139 @@
+"""Hand-rolled optimizers (optax is not available offline).
+
+AdamW keeps fp32 (m, v) per param; Adafactor factors the second moment for
+giant models (qwen3-moe-235b: DESIGN.md §6).  Both take/return pytrees and
+are pure — safe under jit/pjit; optimizer state inherits the param sharding
+(factored Adafactor vectors inherit the reduced spec).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+# ---------------------------------------------------------------- AdamW
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1, max_grad_norm=1.0):
+    grads, gn = clip_by_global_norm(grads, max_grad_norm)
+    count = state["count"] + 1
+    cf = count.astype(jnp.float32)
+    bc1 = 1.0 - jnp.power(b1, cf)
+    bc2 = 1.0 - jnp.power(b2, cf)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        step = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "count": count}, gn
+
+
+# ------------------------------------------------------------- Adafactor
+
+
+def _factored(shape):
+    return len(shape) >= 2
+
+
+def adafactor_init(params):
+    def init_one(p):
+        if _factored(p.shape):
+            row = jnp.zeros(p.shape[:-1], jnp.float32)
+            col = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return {"vr": row, "vc": col}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"f": jax.tree.map(init_one, params,
+                              is_leaf=lambda x: isinstance(x, jnp.ndarray)),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(params, grads, state, *, lr, decay=0.99, eps=1e-30,
+                     weight_decay=0.0, max_grad_norm=1.0, clip_threshold=1.0):
+    grads, gn = clip_by_global_norm(grads, max_grad_norm)
+    count = state["count"] + 1
+
+    def upd(p, g, f):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + eps
+        if _factored(p.shape):
+            vr = decay * f["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+            vc = decay * f["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+            rfac = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+            update = g / (jnp.sqrt(rfac)[..., None] * jnp.sqrt(vc)[..., None, :]
+                          + 1e-12)
+            newf = {"vr": vr, "vc": vc}
+        else:
+            v = decay * f["v"] + (1 - decay) * g2
+            update = g / (jnp.sqrt(v) + 1e-12)
+            newf = {"v": v}
+        rms = jnp.sqrt(jnp.mean(jnp.square(update)) + 1e-12)
+        update = update / jnp.maximum(1.0, rms / clip_threshold)
+        newp = (p.astype(jnp.float32) - lr * update
+                - lr * weight_decay * p.astype(jnp.float32)).astype(p.dtype)
+        return newp, newf
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_f = treedef.flatten_up_to(state["f"])
+    out = [upd(p, g, f) for p, g, f in zip(flat_p, flat_g, flat_f)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_f = treedef.unflatten([o[1] for o in out])
+    return new_p, {"f": new_f, "count": count}, gn
+
+
+def opt_init(name: str):
+    return {"adamw": adamw_init, "adafactor": adafactor_init}[name]
+
+
+def opt_update(name: str):
+    return {"adamw": adamw_update, "adafactor": adafactor_update}[name]
+
+
+def opt_state_specs(name: str, param_specs):
+    """Logical specs for the optimizer state, mirroring param specs."""
+    if name == "adamw":
+        return {"m": param_specs, "v": param_specs, "count": None}
+
+    def one(spec):
+        spec = tuple(spec)
+        if len(spec) >= 2:
+            return {"vr": spec[:-1], "vc": spec[:-2] + spec[-1:]}
+        return {"v": spec}
+    return {"f": jax.tree.map(one, param_specs,
+                              is_leaf=lambda x: type(x) is tuple),
+            "count": None}

@@ -1,0 +1,99 @@
+"""Train state + step.
+
+Supports microbatched gradient accumulation (compute/comm overlap: XLA
+overlaps each microbatch's psum with the next microbatch's compute) and
+optional int8 gradient compression for the cross-pod reduction.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import build_model
+from .optimizer import opt_init, opt_update, opt_state_specs
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    step: jnp.ndarray
+
+
+def make_train_state(cfg, key) -> TrainState:
+    model = build_model(cfg)
+    params = model.init(key)
+    opt = opt_init(cfg.optimizer)(params)
+    return TrainState(params=params, opt=opt, step=jnp.zeros((), jnp.int32))
+
+
+def state_specs(cfg, model) -> TrainState:
+    pspec = model.param_specs()
+    return TrainState(params=pspec,
+                      opt=opt_state_specs(cfg.optimizer, pspec),
+                      step=None)
+
+
+def _quantize_int8(g):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-8) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def make_train_step(cfg, *, lr=3e-4, microbatches: int = 1,
+                    grad_compression: bool = False, use_kernel: bool = False):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    model = build_model(cfg, use_kernel=use_kernel)
+    update = opt_update(cfg.optimizer)
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def compute_grads(params, batch):
+        if microbatches <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, grads
+
+        def split(x):
+            b = x.shape[0]
+            return x.reshape((microbatches, b // microbatches) + x.shape[1:])
+        micro = jax.tree.map(split, batch)
+
+        def body(carry, mb):
+            acc, lsum = carry
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            acc = jax.tree.map(jnp.add, acc, grads)
+            return (acc, lsum + loss), metrics
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (acc, lsum), metrics = lax.scan(body, (zeros, jnp.zeros(())), micro)
+        grads = jax.tree.map(lambda g: g / microbatches, acc)
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return lsum / microbatches, metrics, grads
+
+    def train_step(state: TrainState, batch) -> tuple:
+        loss, metrics, grads = compute_grads(state.params, batch)
+        if grad_compression:
+            qs = jax.tree.map(_quantize_int8, grads,
+                              is_leaf=lambda x: isinstance(x, jnp.ndarray))
+            grads = jax.tree.map(
+                lambda qsc: _dequantize_int8(*qsc), qs,
+                is_leaf=lambda x: isinstance(x, tuple))
+        new_params, new_opt, gnorm = update(state.params, grads, state.opt,
+                                            lr=lr)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step, model
+
+
+def train_step(cfg, state, batch, **kw):
+    step_fn, _ = make_train_step(cfg, **kw)
+    return step_fn(state, batch)

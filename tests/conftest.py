@@ -1,0 +1,21 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches see
+the real single CPU device; only launch/dryrun.py (a subprocess) forces
+512 host devices."""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import get_config, reduced
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def tiny(name: str, **over):
+    cfg = reduced(get_config(name))
+    if over:
+        cfg = dataclasses.replace(cfg, **over)
+    return cfg

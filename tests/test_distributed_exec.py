@@ -1,0 +1,130 @@
+"""Real sharded EXECUTION tests (not just lower/compile): run reduced
+models on multi-device host meshes in subprocesses, including an elastic
+checkpoint restore onto a different mesh shape."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ENV = {**os.environ, "PYTHONPATH": "src"}
+
+
+def _run(code, timeout=900):
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=timeout, env=ENV)
+    assert res.returncode == 0, (res.stdout[-1500:], res.stderr[-3000:])
+    return res.stdout
+
+
+@pytest.mark.slow
+def test_sharded_train_step_executes_on_8_devices():
+    """tp-scheme reduced model trains on a (2, 4) mesh with the same
+    rules/shardings the production dry-run uses; loss decreases."""
+    out = _run(r"""
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+import dataclasses
+import jax, jax.numpy as jnp
+from repro.configs import get_config, reduced
+from repro.models import build_model
+from repro.models.api import abstract_state
+from repro.sharding.specs import make_rules, tree_shardings, use_rules
+from repro.train.step import make_train_state, make_train_step, state_specs
+
+cfg = dataclasses.replace(reduced(get_config('granite-34b')),
+                          n_heads=8, n_kv_heads=1, head_dim=32, d_model=128,
+                          d_ff=256, num_layers=2)
+mesh = jax.make_mesh((2, 4), ('data', 'model'),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+rules = make_rules(cfg, mode='train', tp_size=4, dp_size=2, global_batch=4)
+model = build_model(cfg)
+with mesh, use_rules(rules, mesh):
+    step_fn, _ = make_train_step(cfg, lr=1e-3)
+    state = make_train_state(cfg, jax.random.PRNGKey(0))
+    sh = tree_shardings(state_specs(cfg, model), mesh, rules, state)
+    state = jax.device_put(state, sh)
+    batch = {'tokens': jax.random.randint(jax.random.PRNGKey(1), (4, 64),
+                                          0, cfg.vocab_size)}
+    step = jax.jit(step_fn, in_shardings=(sh, None), out_shardings=(sh, None),
+                   donate_argnums=(0,))
+    state, m1 = step(state, batch)
+    state, m2 = step(state, batch)
+l1, l2 = float(m1['loss']), float(m2['loss'])
+assert l2 < l1, (l1, l2)
+print('OK sharded train', l1, '->', l2)
+""")
+    assert "OK sharded train" in out
+
+
+@pytest.mark.slow
+def test_elastic_restore_across_mesh_shapes(tmp_path):
+    """Save on a (4, 2) mesh, restore + continue on (2, 4) — the elastic
+    resize path (checkpoint stores full logical arrays)."""
+    ck = str(tmp_path / "ck")
+    code_tpl = r"""
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+import dataclasses
+import jax, jax.numpy as jnp
+from repro.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from repro.configs import get_config, reduced
+from repro.models import build_model
+from repro.sharding.specs import make_rules, tree_shardings, use_rules
+from repro.train.step import make_train_state, make_train_step, state_specs
+
+MESH = %s
+cfg = dataclasses.replace(reduced(get_config('stablelm-3b')),
+                          n_heads=8, n_kv_heads=8, head_dim=16, d_model=128,
+                          d_ff=256, num_layers=2)
+mesh = jax.make_mesh(MESH, ('data', 'model'),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+rules = make_rules(cfg, mode='train', tp_size=MESH[1], dp_size=MESH[0],
+                   global_batch=4)
+model = build_model(cfg)
+with mesh, use_rules(rules, mesh):
+    step_fn, _ = make_train_step(cfg, lr=1e-3)
+    state = make_train_state(cfg, jax.random.PRNGKey(0))
+    sh = tree_shardings(state_specs(cfg, model), mesh, rules, state)
+    last = latest_step(%r)
+    if last is not None:
+        state = restore_checkpoint(%r, last, state, shardings=sh)
+    else:
+        state = jax.device_put(state, sh)
+    batch = {'tokens': jax.random.randint(jax.random.PRNGKey(1), (4, 64),
+                                          0, cfg.vocab_size)}
+    step = jax.jit(step_fn, in_shardings=(sh, None), out_shardings=(sh, None))
+    state, m = step(state, batch)
+    save_checkpoint(%r, int(state.step), state)
+print('OK phase loss', float(m['loss']), 'step', int(state.step))
+"""
+    out1 = _run(code_tpl % ((4, 2), ck, ck, ck))
+    assert "step 1" in out1
+    out2 = _run(code_tpl % ((2, 4), ck, ck, ck))   # resized mesh
+    assert "step 2" in out2
+
+
+def test_hpl_on_dragonfly_topology():
+    """The paper's dragonfly support: HPL DES runs on a dragonfly with
+    minimal routing and produces sane throughput."""
+    from repro.core.apps.hpl import HPLConfig, HPLSim
+    from repro.core.hardware.node import local_node
+    from repro.core.hardware.topology import Dragonfly
+    topo = Dragonfly(4, 4, 2, link_bw=100e9 / 8)   # 32 nodes
+    cfg = HPLConfig(N=2048, nb=128, P=4, Q=4)
+    res = HPLSim(cfg, local_node(), topo).run()
+    agg = 16 * local_node().peak_flops / 1e9
+    assert 0.005 * agg < res.gflops < agg
+
+
+def test_hpl_bcast_long_variant():
+    from repro.core.apps.hpl import HPLConfig, HPLSim
+    from repro.core.hardware.node import local_node
+    from repro.core.hardware.topology import FatTreeTwoLevel
+    topo = FatTreeTwoLevel(16, 4, 2, link_bw=100e9 / 8)
+    t = {}
+    for variant in ("1ring", "long"):
+        cfg = HPLConfig(N=2048, nb=128, P=2, Q=8, bcast=variant)
+        t[variant] = HPLSim(cfg, local_node(), topo).run().time_s
+    # both complete; scatter+allgather beats store&forward on wide rows
+    assert t["long"] < t["1ring"] * 1.5

@@ -1,0 +1,147 @@
+"""DES engine + stream-level network unit tests."""
+import math
+
+import pytest
+
+from repro.core.engine import Engine
+from repro.core.hardware.network import Network, Link
+from repro.core.hardware.topology import (FatTreeTwoLevel, Dragonfly, Torus,
+                                          MultiPod)
+
+
+def test_engine_wait_ordering():
+    eng = Engine()
+    log = []
+
+    def proc(name, waits):
+        for w in waits:
+            yield w
+            log.append((name, eng.now))
+    eng.spawn(proc("a", [1.0, 2.0]))
+    eng.spawn(proc("b", [1.5]))
+    eng.run_all()
+    assert log == [("a", 1.0), ("b", 1.5), ("a", 3.0)]
+
+
+def test_engine_events_and_join():
+    eng = Engine()
+    ev = eng.event()
+    out = []
+
+    def waiter():
+        payload = yield ev
+        out.append((eng.now, payload))
+
+    def setter():
+        yield 2.5
+        ev.set("hello")
+    w = eng.spawn(waiter())
+
+    def joiner():
+        yield w
+        out.append(("joined", eng.now))
+    eng.spawn(setter())
+    eng.spawn(joiner())
+    eng.run_all()
+    assert out == [(2.5, "hello"), ("joined", 2.5)]
+
+
+def test_network_single_flow_rate():
+    eng = Engine()
+
+    class T:
+        base_latency = 1e-6
+        l = Link(1e9)
+        def route(self, s, d):
+            return [self.l]
+    net = Network(eng, T())
+    net.send(0, 1, 1e9)
+    eng.run_all()
+    assert abs(eng.now - (1.0 + 1e-6)) < 1e-3
+
+
+def test_network_fair_sharing_two_flows():
+    eng = Engine()
+
+    class T:
+        base_latency = 0.0
+        l = Link(1e9)
+        def route(self, s, d):
+            return [self.l]
+    net = Network(eng, T())
+    net.send(0, 1, 1e9)
+    net.send(2, 3, 1e9)
+    eng.run_all()
+    # both share 0.5 GB/s -> both finish at 2.0 s
+    assert abs(eng.now - 2.0) < 1e-3
+
+
+def test_network_components_are_independent():
+    eng = Engine()
+
+    class T:
+        base_latency = 0.0
+        l1, l2 = Link(1e9), Link(2e9)
+        def route(self, s, d):
+            return [self.l1] if s == 0 else [self.l2]
+    net = Network(eng, T())
+    d1 = net.send(0, 1, 1e9)
+    d2 = net.send(2, 3, 1e9)
+    times = {}
+
+    def watch(name, ev):
+        yield ev
+        times[name] = eng.now
+    eng.spawn(watch("f1", d1))
+    eng.spawn(watch("f2", d2))
+    eng.run_all()
+    assert abs(times["f1"] - 1.0) < 1e-3
+    assert abs(times["f2"] - 0.5) < 1e-3
+
+
+# --------------------------------------------------------------- topology
+def test_fat_tree_dmodk_routes():
+    t = FatTreeTwoLevel(64, 8, 4, link_bw=1e9)
+    # same edge: 2 hops
+    assert len(t.route(0, 1)) == 2
+    # cross edge: 4 hops through core dst % 4
+    path = t.route(0, 13)
+    assert len(path) == 4
+    assert path[1] is t.edge_up[0][13 % 4]
+    assert t.route(5, 5) == []
+
+
+def test_fat_tree_no_routing_tables():
+    """Dynamic routing: memory footprint is O(nodes), not O(nodes^2)."""
+    t = FatTreeTwoLevel(10008, 18, 18, link_bw=1e9)
+    n_links = (len(t.node_up) + len(t.node_down)
+               + sum(len(r) for r in t.edge_up)
+               + sum(len(r) for r in t.edge_down))
+    assert n_links < 3 * 10008 + 2 * 556 * 18 + 10
+
+
+def test_dragonfly_routes():
+    t = Dragonfly(4, 4, 2, link_bw=1e9)
+    # same router
+    assert len(t.route(0, 1)) == 2
+    # same group, different router
+    assert len(t.route(0, 3)) == 3
+    # cross group: up, (local), global, (local), down
+    path = t.route(0, t.p * t.a * 2 + 3)
+    assert 3 <= len(path) <= 5
+
+
+def test_torus_routes_shortest_wrap():
+    t = Torus((4, 4), link_bw=1e9)
+    # neighbor: 1 link
+    assert len(t.route(0, 1)) == 1
+    # wraparound shorter: 0 -> 3 in a ring of 4 is 1 hop backwards
+    assert len(t.route(0, 3)) == 1
+    assert len(t.route(0, 5)) == 2   # diagonal: 1+1
+
+
+def test_multipod_routes_cross_dcn():
+    pods = [Torus((2, 2), link_bw=1e9) for _ in range(2)]
+    t = MultiPod(pods, 4)
+    path = t.route(1, 6)
+    assert any(l in t.dcn_up for l in path)

@@ -1,0 +1,69 @@
+"""HPL application model: numroc correctness, DES vs fastsim agreement,
+and the paper's headline predictions (Table II band)."""
+import dataclasses
+
+import pytest
+
+from repro.core.apps.hpl import HPLConfig, HPLSim, numroc
+from repro.core.fastsim import FastSimParams, simulate_hpl_fast
+from repro.core.hardware.node import (frontera_node, local_node,
+                                      pupmaya_node)
+from repro.core.hardware.topology import FatTreeTwoLevel
+
+
+def test_numroc_partitions_completely():
+    for n, nb, p in [(1000, 32, 4), (4096, 128, 3), (999, 7, 5)]:
+        total = sum(numroc(n, nb, i, p) for i in range(p))
+        assert total == n, (n, nb, p, total)
+
+
+def test_des_fastsim_cross_validation():
+    node = local_node()
+    topo = FatTreeTwoLevel(16, 4, 2, link_bw=100e9 / 8)
+    for (N, nb, P, Q) in [(2048, 128, 4, 4), (4096, 128, 2, 8)]:
+        cfg = HPLConfig(N=N, nb=nb, P=P, Q=Q)
+        des = HPLSim(cfg, node, topo).run()
+        prm = dataclasses.replace(
+            FastSimParams.from_node(node, link_bw=100e9 / 8), lookahead=0.0)
+        fast = simulate_hpl_fast(cfg, prm)
+        rel = abs(des.time_s - fast["time_s"]) / des.time_s
+        assert rel < 0.15, (N, nb, P, Q, des.time_s, fast["time_s"])
+
+
+def test_gflops_below_peak_and_sane():
+    node = local_node()
+    topo = FatTreeTwoLevel(16, 4, 2, link_bw=100e9 / 8)
+    cfg = HPLConfig(N=4096, nb=128, P=4, Q=4)
+    res = HPLSim(cfg, node, topo).run()
+    agg_peak = 16 * node.peak_flops / 1e9
+    assert 0.01 * agg_peak < res.gflops < agg_peak
+
+
+@pytest.mark.slow
+def test_table2_frontera_prediction_band():
+    """Paper Table II: Frontera Rmax 23,516 TF; paper's sim says 22,566
+    (-4%).  Our prediction must land within 10% of the reported Rmax."""
+    cfg = HPLConfig(N=9_282_848, nb=384, P=88, Q=91)
+    prm = FastSimParams.from_node(frontera_node(), link_bw=100e9 / 8)
+    res = simulate_hpl_fast(cfg, prm)
+    assert abs(res["tflops"] - 23516) / 23516 < 0.10, res["tflops"]
+
+
+@pytest.mark.slow
+def test_table2_pupmaya_prediction_band():
+    cfg = HPLConfig(N=4_748_928, nb=384, P=59, Q=72)
+    prm = FastSimParams.from_node(pupmaya_node(), link_bw=100e9 / 8)
+    res = simulate_hpl_fast(cfg, prm)
+    assert abs(res["tflops"] - 7484) / 7484 < 0.10, res["tflops"]
+
+
+def test_whatif_network_upgrade_small_gain():
+    """Paper §V: doubling fabric bandwidth buys only a few percent."""
+    cfg = HPLConfig(N=1_000_000, nb=384, P=32, Q=32)
+    node = frontera_node()
+    r100 = simulate_hpl_fast(cfg, FastSimParams.from_node(
+        node, link_bw=100e9 / 8))
+    r200 = simulate_hpl_fast(cfg, FastSimParams.from_node(
+        node, link_bw=200e9 / 8))
+    gain = r200["tflops"] / r100["tflops"] - 1
+    assert 0.0 <= gain < 0.15

@@ -1,0 +1,137 @@
+"""Hypothesis property tests on system invariants."""
+import math
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.apps.hpl import numroc
+from repro.core.engine import Engine
+from repro.core.simblas import SimBLAS
+from repro.core.hardware.node import local_node
+from repro.core.simxla import ring_allreduce_time, ring_allgather_time
+from repro.kernels.maxmin_fair.ref import waterfill_ref
+
+SETTINGS = settings(max_examples=30, deadline=None)
+
+
+@SETTINGS
+@given(n=st.integers(1, 100000), nb=st.integers(1, 512),
+       p=st.integers(1, 64))
+def test_numroc_partition_property(n, nb, p):
+    assert sum(numroc(n, nb, i, p) for i in range(p)) == n
+
+
+@SETTINGS
+@given(st.lists(st.floats(1e-6, 10.0), min_size=1, max_size=20))
+def test_engine_time_monotone(waits):
+    eng = Engine()
+    seen = []
+
+    def proc():
+        for w in waits:
+            yield w
+            seen.append(eng.now)
+    eng.spawn(proc())
+    eng.run_all()
+    assert seen == sorted(seen)
+    assert abs(seen[-1] - sum(waits)) < 1e-9 * max(1.0, sum(waits))
+
+
+@SETTINGS
+@given(m=st.integers(1, 4096), n=st.integers(1, 4096),
+       k=st.integers(1, 4096))
+def test_simblas_monotone_and_positive(m, n, k):
+    blas = SimBLAS(local_node())
+    t = blas.dgemm(m, n, k)
+    assert t > 0
+    assert blas.dgemm(m + 64, n, k) >= t
+
+
+@SETTINGS
+@given(nbytes=st.floats(1.0, 1e9), n=st.integers(2, 64))
+def test_collective_time_positive_and_scales(nbytes, n):
+    t = ring_allreduce_time(nbytes, n)
+    assert t > 0
+    assert ring_allreduce_time(2 * nbytes, n) > t
+    assert ring_allgather_time(nbytes, n) < t + 1e-12 or n == 2
+
+
+@settings(max_examples=15, deadline=None)
+@given(data=st.data())
+def test_waterfill_maxmin_properties(data):
+    F = data.draw(st.integers(2, 24))
+    L = data.draw(st.integers(2, 24))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 16)))
+    adj = (rng.random((F, L)) < 0.3).astype(np.int8)
+    caps = rng.random(L).astype(np.float32) * 1e9 + 1e7
+    rates = np.asarray(waterfill_ref(jnp.asarray(adj), jnp.asarray(caps)))
+    finite = np.minimum(rates.astype(np.float64), 1e30)
+    usage = adj.T.astype(np.float64) @ np.where(adj.sum(1)[:, None] > 0,
+                                                finite[:, None], 0)[:, 0]
+    # conservation
+    assert (usage <= caps * (1 + 1e-3) + 1).all()
+    # max-min: every flow with links has a saturated bottleneck link where
+    # it is among the max-rate flows
+    for f in range(F):
+        links = np.nonzero(adj[f])[0]
+        if len(links) == 0:
+            continue
+        ok = False
+        for l in links:
+            flows_l = np.nonzero(adj[:, l])[0]
+            if (usage[l] >= caps[l] * (1 - 1e-2)
+                    and finite[f] >= finite[flows_l].max() * (1 - 1e-3)):
+                ok = True
+                break
+        assert ok, (f, rates[f])
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_model_causality(seed):
+    """Changing future tokens must not change logits at earlier positions."""
+    import dataclasses
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+    cfg = dataclasses.replace(reduced(get_config("qwen2-0.5b")),
+                              dtype="float32", num_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab_size, (1, 24)).astype(np.int32)
+    t = 11
+    toks2 = toks.copy()
+    toks2[:, t + 1:] = rng.integers(0, cfg.vocab_size,
+                                    toks2[:, t + 1:].shape)
+    fwd = jax.jit(model.forward)
+    l1, _ = fwd(params, {"tokens": jnp.asarray(toks)})
+    l2, _ = fwd(params, {"tokens": jnp.asarray(toks2)})
+    np.testing.assert_allclose(np.asarray(l1[:, :t + 1]),
+                               np.asarray(l2[:, :t + 1]), atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_ssm_causality(seed):
+    import dataclasses
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+    cfg = dataclasses.replace(reduced(get_config("mamba2-780m")),
+                              dtype="float32", num_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab_size, (1, 40)).astype(np.int32)
+    t = 17
+    toks2 = toks.copy()
+    toks2[:, t + 1:] = rng.integers(0, cfg.vocab_size,
+                                    toks2[:, t + 1:].shape)
+    fwd = jax.jit(model.forward)
+    l1, _ = fwd(params, {"tokens": jnp.asarray(toks)})
+    l2, _ = fwd(params, {"tokens": jnp.asarray(toks2)})
+    np.testing.assert_allclose(np.asarray(l1[:, :t + 1]),
+                               np.asarray(l2[:, :t + 1]), atol=1e-4)

@@ -1,0 +1,104 @@
+"""HLO analyzer tests on synthetic programs with known costs."""
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.hlo_parse import analyze, parse_hlo_module
+from repro.roofline.analysis import roofline_terms, model_flops
+from repro.configs import get_config, get_shape
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_matmul_flops():
+    a = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+    text = _compile_text(lambda x, y: x @ y, a, a)
+    r = analyze(text)
+    expect = 2 * 512 ** 3
+    assert abs(r["flops"] - expect) / expect < 0.05, r["flops"]
+
+
+def test_scan_trip_count_multiplies():
+    a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+
+    def g(x, y):
+        def body(c, _):
+            return c @ y, ()
+        out, _ = jax.lax.scan(body, x, None, length=12)
+        return out
+    r = analyze(_compile_text(g, a, a))
+    expect = 12 * 2 * 256 ** 3
+    assert abs(r["flops"] - expect) / expect < 0.05, r["flops"]
+
+
+def test_nested_scan_multiplies():
+    a = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+    def g(x, y):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ y, ()
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, ()
+        out, _ = jax.lax.scan(outer, x, None, length=5)
+        return out
+    r = analyze(_compile_text(g, a, a))
+    expect = 15 * 2 * 128 ** 3
+    assert abs(r["flops"] - expect) / expect < 0.05, r["flops"]
+
+
+def test_bytes_reasonable_for_elementwise():
+    a = jax.ShapeDtypeStruct((1 << 20,), jnp.float32)
+    r = analyze(_compile_text(lambda x: x * 2 + 1, a))
+    # read + write of 4 MiB within 4x (fusion boundaries)
+    assert 4e6 <= r["bytes"] <= 64e6, r["bytes"]
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms(per_device_flops=1e12, per_device_bytes=1e9,
+                       per_device_coll_bytes=1e6, chips=256)
+    assert t["dominant"] == "compute"
+    t2 = roofline_terms(per_device_flops=1e9, per_device_bytes=1e12,
+                        per_device_coll_bytes=1e6, chips=256)
+    assert t2["dominant"] == "memory"
+
+
+def test_model_flops_6nd():
+    cfg = get_config("qwen2-0.5b")
+    shape = get_shape("train_4k")
+    mf = model_flops(cfg, shape)
+    n = cfg.n_active_params()
+    assert mf == pytest.approx(6.0 * n * shape.tokens)
+
+
+@pytest.mark.slow
+def test_collective_parse_on_sharded_program():
+    """Run a tiny sharded program in a subprocess (needs >1 device) and
+    check all-reduce wire bytes."""
+    code = r"""
+import os
+os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=8'
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.roofline.hlo_parse import analyze
+mesh = jax.make_mesh((8,), ('x',), axis_types=(jax.sharding.AxisType.Auto,))
+a = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+f = jax.jit(lambda a, b: a @ b,
+            in_shardings=(NamedSharding(mesh, P(None, 'x')),
+                          NamedSharding(mesh, P('x', None))),
+            out_shardings=NamedSharding(mesh, P(None, None)))
+r = analyze(f.lower(a, a).compile().as_text())
+ar = r['collectives'].get('all-reduce', {'wire_bytes': 0})
+expect = 2 * 7 / 8 * 1024 * 1024 * 4
+assert abs(ar['wire_bytes'] - expect) / expect < 0.05, ar
+print('OK')
+"""
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=300)
+    assert res.returncode == 0 and "OK" in res.stdout, res.stderr[-2000:]

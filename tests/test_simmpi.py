@@ -1,0 +1,102 @@
+"""SimMPI p2p + collective tests against analytic bounds."""
+import math
+
+import pytest
+
+from repro.core.engine import Engine
+from repro.core.hardware.network import Network
+from repro.core.hardware.topology import FatTreeTwoLevel, Torus
+from repro.core.simmpi import SimMPI, EAGER_LIMIT
+
+
+def _setup(n=8, bw=12.5e9):
+    eng = Engine()
+    topo = FatTreeTwoLevel(max(n, 16), 4, 2, link_bw=bw, base_latency=1e-6)
+    net = Network(eng, topo)
+    return eng, SimMPI(eng, net, n)
+
+
+def test_p2p_eager_sender_returns_early():
+    eng, mpi = _setup()
+    t_send, t_recv = {}, {}
+
+    def sender():
+        yield from mpi.send(0, 1, 1024)      # eager
+        t_send["t"] = eng.now
+
+    def receiver():
+        yield from mpi.recv(0, 1)
+        t_recv["t"] = eng.now
+    eng.spawn(sender())
+    eng.spawn(receiver())
+    eng.run_all()
+    assert t_send["t"] < t_recv["t"]         # buffered send returns first
+
+
+def test_p2p_rendezvous_blocks_sender():
+    eng, mpi = _setup()
+    times = {}
+    size = 10 * EAGER_LIMIT
+
+    def sender():
+        yield from mpi.send(0, 1, size)
+        times["send"] = eng.now
+
+    def receiver():
+        yield from mpi.recv(0, 1)
+        times["recv"] = eng.now
+    eng.spawn(sender())
+    eng.spawn(receiver())
+    eng.run_all()
+    assert abs(times["send"] - times["recv"]) < 1e-9
+    # >= pure bandwidth time
+    assert times["recv"] >= size / 12.5e9
+
+
+@pytest.mark.parametrize("n", [2, 4, 8])
+def test_allreduce_completes_and_bounded(n):
+    eng, mpi = _setup(n)
+    nbytes = 1 << 20
+    done = []
+
+    def rank(r):
+        yield from mpi.allreduce(r, list(range(n)), nbytes, op_id=("ar",))
+        done.append(eng.now)
+    for r in range(n):
+        eng.spawn(rank(r))
+    eng.run_all()
+    assert len(done) == n
+    t = max(done)
+    floor = 2 * (n - 1) / n * nbytes / 12.5e9     # ring lower bound
+    assert t >= floor * 0.5
+    assert t <= floor * 10 + 1e-3
+
+
+def test_bcast_binomial_latency_scales_log():
+    times = {}
+    for n in (4, 16):
+        eng, mpi = _setup(n)
+        done = []
+
+        def rank(r, n=n, eng=eng, mpi=mpi, done=done):
+            yield from mpi.bcast(r, 0, list(range(n)), 4096, op_id=("b",))
+            done.append(eng.now)
+        for r in range(n):
+            eng.spawn(rank(r))
+        eng.run_all()
+        times[n] = max(done)
+    # binomial: ~log2(n) rounds -> 16 ranks ~2x the 4-rank time, not 4x
+    assert times[16] < times[4] * 3.0
+
+
+def test_alltoall_completes():
+    eng, mpi = _setup(8)
+    done = []
+
+    def rank(r):
+        yield from mpi.alltoall(r, list(range(8)), 65536, op_id=("a2a",))
+        done.append(eng.now)
+    for r in range(8):
+        eng.spawn(rank(r))
+    eng.run_all()
+    assert len(done) == 8
