@@ -1,12 +1,15 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--json]
 
-Prints ``name,us_per_call,derived`` CSV (one row per measurement).
+Default output is ``name,us_per_call,derived`` CSV (one row per
+measurement); ``--json`` emits the same rows as NDJSON — one JSON object
+per line — for machine consumption (BENCH_*.json trajectory tracking).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -17,6 +20,7 @@ MODULES = [
     "benchmarks.fig7_scalability",      # Fig 7: sim cost vs rank count
     "benchmarks.table2_top500",         # Table II: Frontera / PupMaya
     "benchmarks.sec5_whatif",           # §V: what-if analyses
+    "benchmarks.sweep_bench",           # batched sweep engine vs loop
     "benchmarks.tpu_predict",           # TPU adaptation table
     "benchmarks.kernels_bench",         # Pallas kernels
 ]
@@ -28,9 +32,12 @@ def main() -> None:
                     help="full-size benchmark configs (slow)")
     ap.add_argument("--only", default=None,
                     help="comma-separated module suffixes")
+    ap.add_argument("--json", action="store_true",
+                    help="emit NDJSON rows instead of CSV")
     args = ap.parse_args()
 
-    print("name,us_per_call,derived")
+    if not args.json:
+        print("name,us_per_call,derived")
     failed = 0
     for mod_name in MODULES:
         if args.only and not any(mod_name.endswith(o)
@@ -40,11 +47,20 @@ def main() -> None:
             mod = __import__(mod_name, fromlist=["run"])
             rows = mod.run(quick=not args.full)
             for r in rows:
-                print(f"{r['name']},{r['us_per_call']:.2f},"
-                      f"\"{r['derived']}\"", flush=True)
-        except Exception:
+                if args.json:
+                    print(json.dumps(r), flush=True)
+                else:
+                    print(f"{r['name']},{r['us_per_call']:.2f},"
+                          f"\"{r['derived']}\"", flush=True)
+        except Exception as exc:
             failed += 1
-            print(f"{mod_name},NaN,\"ERROR\"", flush=True)
+            if args.json:
+                print(json.dumps({"name": mod_name, "us_per_call": None,
+                                  "derived": "ERROR",
+                                  "error": f"{type(exc).__name__}: {exc}"}),
+                      flush=True)
+            else:
+                print(f"{mod_name},NaN,\"ERROR\"", flush=True)
             traceback.print_exc(file=sys.stderr)
     if failed:
         sys.exit(1)

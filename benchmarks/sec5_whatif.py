@@ -13,18 +13,22 @@ from pathlib import Path
 
 def run(quick: bool = True):
     from repro.core.apps.hpl import HPLConfig
-    from repro.core.fastsim import FastSimParams, simulate_hpl_fast
+    from repro.core.fastsim import FastSimParams, sweep_hpl
     from repro.core.hardware.node import frontera_node, pupmaya_node
 
+    systems = [("frontera", frontera_node(), 9_282_848, (88, 91)),
+               ("pupmaya", pupmaya_node(), 4_748_928, (59, 72))]
+    cfgs, prms = [], []
+    for name, node, N, (P, Q) in systems:
+        for bw in (100e9 / 8, 200e9 / 8):
+            cfgs.append(HPLConfig(N=N, nb=384, P=P, Q=Q))
+            prms.append(FastSimParams.from_node(node, link_bw=bw))
+    # both systems x both fabrics: one sweep, one compile per bucket
+    res = sweep_hpl(cfgs, prms)
+
     rows = []
-    for name, node, N, (P, Q) in [
-            ("frontera", frontera_node(), 9_282_848, (88, 91)),
-            ("pupmaya", pupmaya_node(), 4_748_928, (59, 72))]:
-        cfg = HPLConfig(N=N, nb=384, P=P, Q=Q)
-        r100 = simulate_hpl_fast(cfg, FastSimParams.from_node(
-            node, link_bw=100e9 / 8))
-        r200 = simulate_hpl_fast(cfg, FastSimParams.from_node(
-            node, link_bw=200e9 / 8))
+    for i, (name, node, N, (P, Q)) in enumerate(systems):
+        r100, r200 = res[2 * i], res[2 * i + 1]
         gain = (r200["tflops"] / r100["tflops"] - 1) * 100
         rows.append({
             "name": f"sec5.hpl_200g_{name}",

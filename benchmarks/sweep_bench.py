@@ -1,0 +1,67 @@
+"""Batched sweep engine vs per-config loop (DESIGN.md §11).
+
+A 64-scenario hardware what-if grid (8 link bandwidths x 8 GEMM
+efficiencies) on a small-cluster HPL config: the loop path dispatches 64
+single-scenario programs (all warm — params are traced, so they share
+one compile); the batched path serves the whole grid as one program with
+a trailing scenario axis.  Target: >= 10x wall-time win, results
+matching to 1e-6."""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+
+
+def _best(fn, reps: int = 3) -> float:
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def run(quick: bool = True):
+    from repro.core.apps.hpl import HPLConfig
+    from repro.core.fastsim import (FastSimParams, simulate_hpl_fast,
+                                    sweep_hpl, trace_count)
+    from repro.core.hardware.node import frontera_node
+
+    cfg = HPLConfig(N=32768 if quick else 65536, nb=128, P=2, Q=4)
+    base = FastSimParams.from_node(frontera_node(), link_bw=100e9 / 8)
+    grid = [dataclasses.replace(base, link_bw=base.link_bw * s,
+                                gemm_eff=base.gemm_eff * e)
+            for s, e in itertools.product(
+                [0.5, 0.75, 1.0, 1.5, 2.0, 3.0, 4.0, 8.0],
+                [0.90, 0.95, 0.97, 1.0, 1.02, 1.05, 1.07, 1.10])]
+
+    # warm both paths (one compile each: single-lane and batched bucket)
+    simulate_hpl_fast(cfg, grid[0])
+    sweep_hpl(cfg, grid)
+    traces_warm = trace_count()
+
+    loop = [simulate_hpl_fast(cfg, p) for p in grid]
+    t_loop = _best(lambda: [simulate_hpl_fast(cfg, p) for p in grid])
+    batched = sweep_hpl(cfg, grid)
+    t_batch = _best(lambda: sweep_hpl(cfg, grid))
+
+    max_rel = max(abs(a["time_s"] - b["time_s"]) / b["time_s"]
+                  for a, b in zip(batched, loop))
+    speedup = t_loop / t_batch
+    retraces = trace_count() - traces_warm
+    return [
+        {"name": "sweep.loop64",
+         "us_per_call": t_loop / len(grid) * 1e6,
+         "derived": f"wall_ms={t_loop*1e3:.1f};n={len(grid)}"},
+        {"name": "sweep.batched64",
+         "us_per_call": t_batch / len(grid) * 1e6,
+         "derived": f"wall_ms={t_batch*1e3:.1f};speedup={speedup:.1f}x;"
+                    f"max_rel={max_rel:.1e};retraces_after_warmup="
+                    f"{retraces}"},
+    ]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -2,7 +2,9 @@
 
     PYTHONPATH=src python examples/whatif_analysis.py
 
-HPL: is a 200 Gb/s fabric worth it for Frontera?  (paper: no, +2.6%)
+HPL: which upgrade moves Frontera — faster fabric or faster memory?
+     (the whole grid runs as ONE batched fastsim program; paper found
+     2x fabric buys only +2.6%)
 TPU: which upgrade moves a MoE train step — 2x ICI, 2x HBM, or 2x MXU?
 FT:  should a 3x-slow chip be evicted mid-run?
 """
@@ -12,21 +14,23 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from repro.core.apps.hpl import HPLConfig
-from repro.core.fastsim import FastSimParams, simulate_hpl_fast
+from repro.core.fastsim import FastSimParams
 from repro.core.hardware.node import frontera_node
+from repro.core.predict import whatif_grid
 
 
 def main():
-    print("== HPL: 100 -> 200 Gb/s fabric (Frontera) ==")
+    print("== HPL: fabric x memory what-if grid (Frontera, one batch) ==")
     cfg = HPLConfig(N=9_282_848, nb=384, P=88, Q=91)
-    node = frontera_node()
-    r100 = simulate_hpl_fast(cfg, FastSimParams.from_node(node,
-                                                          link_bw=100e9 / 8))
-    r200 = simulate_hpl_fast(cfg, FastSimParams.from_node(node,
-                                                          link_bw=200e9 / 8))
-    gain = (r200["tflops"] / r100["tflops"] - 1) * 100
-    print(f"  {r100['tflops']:.0f} -> {r200['tflops']:.0f} TF "
-          f"({gain:+.1f}%) — paper found +2.6%: upgrade not worth it")
+    base = FastSimParams.from_node(frontera_node(), link_bw=100e9 / 8)
+    grid = whatif_grid(cfg, base, {"link_bw": [1.0, 2.0, 4.0],
+                                   "mem_bw": [1.0, 1.25]})
+    for row in grid:
+        print(f"  link_bw x{row['link_bw']:.2f} mem_bw x{row['mem_bw']:.2f}"
+              f": {row['tflops']:.0f} TF ({(row['speedup']-1)*100:+.1f}%)")
+    x2 = next(r for r in grid if r["link_bw"] == 2.0 and r["mem_bw"] == 1.0)
+    print(f"  2x fabric alone: {(x2['speedup']-1)*100:+.1f}% — paper found "
+          f"+2.6%: upgrade not worth it")
 
     rec = Path("experiments/dryrun/qwen3-moe-235b-a22b__train_4k__16x16.json")
     if rec.exists():

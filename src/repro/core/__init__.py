@@ -5,13 +5,17 @@ adaptation.  See DESIGN.md §1-2."""
 from .engine import Engine, Event, Process
 from .simblas import SimBLAS
 from .simmpi import SimMPI
-from .calibrate import calibrate, measure_dgemm, fit_linear
-from .fastsim import FastSimParams, simulate_hpl_fast
+from .calibrate import (calibrate, measure_dgemm, fit_linear,
+                        fit_fastsim_params)
+from .fastsim import (FastSimParams, simulate_hpl_fast, sweep_hpl,
+                      simulate_time_traced)
 from .simxla import SimXLA, ICIParams, ICI, collective_time
-from .predict import predict_cell, predict_cell_des, whatif, load_record
+from .predict import (predict_cell, predict_cell_des, whatif, whatif_grid,
+                      load_record)
 
 __all__ = ["Engine", "Event", "Process", "SimBLAS", "SimMPI", "calibrate",
-           "measure_dgemm", "fit_linear", "FastSimParams",
-           "simulate_hpl_fast", "SimXLA", "ICIParams", "ICI",
+           "measure_dgemm", "fit_linear", "fit_fastsim_params",
+           "FastSimParams", "simulate_hpl_fast", "sweep_hpl",
+           "simulate_time_traced", "SimXLA", "ICIParams", "ICI",
            "collective_time", "predict_cell", "predict_cell_des", "whatif",
-           "load_record"]
+           "whatif_grid", "load_record"]

@@ -1,14 +1,23 @@
-"""Microbenchmark calibration (paper §III-B1, Fig 2).
+"""Microbenchmark calibration (paper §III-B1, Fig 2) — plus end-to-end
+gradient calibration of the fastsim parameters.
 
 Measures *real* BLAS performance on this host via numpy and fits the
 SimBLAS analytical model ``E = mu * ops + theta`` by least squares,
 reporting R^2 (the paper reports R^2 = 0.9998 for MKL DGEMM on a
 Broadwell core; we run the same protocol on this container's CPU).
 Memory-bound Level-1 ops calibrate the effective bandwidth the same way.
+
+``fit_fastsim_params`` goes beyond the paper's per-kernel fits: because
+the fast simulator traces its parameters (DESIGN.md §11),
+``jax.value_and_grad`` differentiates the *entire* HPL panel recurrence
+with respect to them, so measured full-application runtimes can be fit
+directly — the simulation-based-optimization loop of Cornebize &
+Legrand, with gradients instead of black-box search.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -157,3 +166,76 @@ def calibrate(quick: bool = False) -> CalibrationProfile:
         mem_bw=measure_stream(n=1 << 22 if quick else 1 << 24),
         panel_bw=measure_dger(),
         theta_mem=measure_small_overhead())
+
+
+# ------------------------------------------------- gradient calibration
+
+FASTSIM_FIT_FIELDS = ("gemm_eff", "mem_bw", "link_bw", "theta",
+                      "net_latency")
+
+
+@dataclasses.dataclass
+class FastSimFit:
+    params: "FastSimParams"          # calibrated parameters
+    loss0: float                     # initial mean squared log-time error
+    loss: float                      # final
+    steps: int
+    history: List[float]             # loss per step
+
+    @property
+    def improvement(self) -> float:
+        return self.loss0 / max(self.loss, 1e-30)
+
+
+def fit_fastsim_params(runs: Sequence[Tuple["HPLConfig", float]],
+                       init: "FastSimParams",
+                       fields: Sequence[str] = FASTSIM_FIT_FIELDS,
+                       steps: int = 300, lr: float = 0.1) -> FastSimFit:
+    """Fit ``fields`` of a FastSimParams to measured HPL runtimes.
+
+    ``runs`` is a list of ``(HPLConfig, measured_seconds)``.  The loss is
+    the mean squared log-time error; parameters are optimized in log
+    space (positivity) with Adam, and the whole value-and-grad — every
+    panel recurrence of every run — is one jitted program.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+    from repro.train.optimizer import adamw_init, adamw_update
+    from .fastsim import FastSimParams, _f64_params, simulate_time_traced
+
+    runs = list(runs)
+    fields = tuple(fields)
+    base = dataclasses.asdict(_f64_params(init))
+    logt_meas = [math.log(t) for _, t in runs]
+
+    def loss_fn(theta):
+        over = dict(base)
+        for name, v in zip(fields, theta):
+            over[name] = jnp.exp(v)
+        prm = FastSimParams(**over)
+        errs = [jnp.log(simulate_time_traced(cfg, prm)) - lm
+                for (cfg, _), lm in zip(runs, logt_meas)]
+        return sum(e * e for e in errs) / len(runs)
+
+    with enable_x64(True):
+        vg = jax.jit(jax.value_and_grad(loss_fn))
+        theta = jnp.asarray([math.log(base[f]) for f in fields],
+                            jnp.float64)
+        state = adamw_init(theta)
+        history: List[float] = []
+        for _ in range(steps):
+            val, g = vg(theta)
+            history.append(float(val))
+            theta, state, _ = adamw_update(theta, g, state, lr=lr,
+                                           b2=0.999, weight_decay=0.0,
+                                           max_grad_norm=1e9)
+        final = float(vg(theta)[0])
+        theta = np.asarray(theta)
+
+    fitted = dict(base)
+    for name, t in zip(fields, theta):
+        fitted[name] = float(math.exp(t))
+    return FastSimFit(params=FastSimParams(**fitted),
+                      loss0=history[0] if history else final,
+                      loss=final, steps=steps, history=history)

@@ -11,20 +11,30 @@ per-panel timing recurrence is a max-plus system over the P x Q grid:
 Everything is vectorized over the grid and the panel loop is a
 ``lax.fori_loop`` — Frontera's 48k panels x 8,008 ranks simulate in
 seconds on this laptop-class CPU (cross-validated against the DES path in
-tests/test_hpl_sim.py).  This is the TPU-era answer to the paper's
-"simulation speed" axis: the simulator is itself a JAX program that could
-run on the accelerator it models.
+tests/test_hpl_sim.py).
+
+Beyond single runs, this module is a *batched sweep engine* (DESIGN.md
+§11): ``(N, nb, P, Q)`` and every ``FastSimParams`` field are traced
+values, array shapes are padded to a small set of buckets with masking,
+and compiled programs live in an LRU cache keyed on the bucket.  Hardware
+what-ifs (link_bw, gemm_eff, mem_bw, lookahead, ...) therefore never
+recompile, and ``sweep_hpl`` runs a whole scenario grid as one program
+with a trailing scenario axis (``jax.vmap`` only for mixed-geometry
+sweeps).  Because parameters are traced,
+``jax.grad``/``jax.value_and_grad`` flow through the full recurrence —
+see ``calibrate.fit_fastsim_params`` for gradient-based calibration.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
-from functools import partial
-from typing import Optional
+from typing import Dict, List, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import enable_x64
 
 from .apps.hpl import HPLConfig
 from .hardware.node import NodeModel
@@ -57,90 +67,195 @@ class FastSimParams:
             link_bw=link_bw, net_latency=net_latency, **kw)
 
 
-def _numroc_vec(rem, nb, shift, nprocs):
-    """Vectorized NUMROC for all procs 0..nprocs-1 with owner shift."""
-    ip = (jnp.arange(nprocs) - shift) % nprocs
-    nblocks = rem // nb
-    base = (nblocks // nprocs) * nb
-    extra = nblocks % nprocs
-    return base + jnp.where(ip < extra, nb,
-                            jnp.where(ip == extra, rem % nb, 0))
+_PARAM_FIELDS = tuple(f.name for f in dataclasses.fields(FastSimParams))
+
+# Registered as a pytree: a FastSimParams passed to jit is *traced*, so
+# changing any value reuses the compiled program (the old code passed a
+# dict of Python floats baked in at trace time).
+jax.tree_util.register_dataclass(
+    FastSimParams, data_fields=list(_PARAM_FIELDS), meta_fields=[])
 
 
-@partial(jax.jit, static_argnums=(0, 1, 2, 3))
-def _simulate(N: int, nb: int, P: int, Q: int, prm: dict):
+def _f64_params(prm: FastSimParams) -> FastSimParams:
+    """Normalize leaves to Python floats so the jit cache sees one dtype."""
+    return FastSimParams(**{n: float(getattr(prm, n)) for n in _PARAM_FIELDS})
+
+
+# ------------------------------------------------------------- bucketing
+def _bucket(n: int) -> int:
+    """Smallest b >= n of the form 2^k or 3*2^(k-1) (<= 1.5x padding)."""
+    n = max(int(n), 1)
+    p = 1 << (n - 1).bit_length()
+    if p >= 4 and 3 * p // 4 >= n:
+        return 3 * p // 4
+    return p
+
+
+def bucket_key(cfg: HPLConfig) -> Tuple[int, int, int]:
+    """(n_panels_max, P_max, Q_max) compile-cache key for a config."""
+    return (_bucket(max(cfg.N // cfg.nb, 1)), _bucket(cfg.P), _bucket(cfg.Q))
+
+
+# ------------------------------------------------------------ traced core
+def _sim_core(N, nb, P, Q, prm: FastSimParams,
+              n_panels_max: int, P_max: int, Q_max: int):
+    """HPL panel recurrence with *traced* (N, nb, P, Q, prm).
+
+    Shapes are the static bucket (P_max, Q_max) and the loop runs
+    n_panels_max iterations; rows p >= P, columns q >= Q and panels
+    k >= N//nb are padding, masked so they never touch live lanes (the
+    ring-broadcast permutation maps padding columns to themselves, the
+    column-sync max and the final max are mask-reduced, and the loop
+    carry freezes once k reaches the live panel count).
+
+    ``prm`` leaves are (B,)-vectors: the whole recurrence carries a
+    *trailing* scenario-batch axis — grid state is (P_max, Q_max, B) —
+    so a hardware what-if grid runs as one program whose gathers and
+    ring permutations move contiguous B-sized blocks (a leading vmap
+    axis would make every gather element-strided; measured ~4x slower).
+    Geometry (N, nb, P, Q) is scalar per call; mixed-geometry sweeps
+    vmap over this core with B=1 (see ``_compiled``).
+    """
+    f64 = jnp.float64
+    N = jnp.asarray(N, jnp.int64)
+    nb = jnp.asarray(nb, jnp.int64)
+    P = jnp.asarray(P, jnp.int64)
+    Q = jnp.asarray(Q, jnp.int64)
+    B = jnp.shape(prm.peak_flops)[0]
+    peak = prm.peak_flops * prm.gemm_eff                 # (B,)
+    mem_bw = prm.mem_bw
+    theta = prm.theta
+    alpha = prm.net_latency
+    bcast_bw = prm.link_bw * prm.bcast_bw_scale
+    swap_bw = prm.link_bw * prm.swap_bw_scale
+    lookahead = prm.lookahead
+
+    # exact ceil-log2 via static lookup tables (float log2 can be off by
+    # one ulp at powers of two, which would flip a whole latency round)
+    ar2 = jnp.asarray([2.0 * math.ceil(math.log2(max(p, 2)))
+                       for p in range(P_max + 1)], f64)
+    swr = jnp.asarray([float(max(math.ceil(math.log2(p)), 1)) if p > 1
+                       else 0.0 for p in range(P_max + 1)], f64)
+    ar_lat = ar2[P] * alpha                              # (B,)
+    sw_rounds = swr[P]
+
+    row_on = jnp.arange(P_max) < P
+    col_on = jnp.arange(Q_max) < Q
+    active = row_on[:, None] & col_on[None, :]
     n_panels = N // nb
-    peak = prm["peak_flops"] * prm["gemm_eff"]
-    mem_bw = prm["mem_bw"]
-    theta = prm["theta"]
-    alpha = prm["net_latency"]
-    bcast_bw = prm["link_bw"] * prm["bcast_bw_scale"]
-    swap_bw = prm["link_bw"] * prm["swap_bw_scale"]
-    ar_lat = 2.0 * math.ceil(math.log2(max(P, 2))) * alpha
-    sw_rounds = max(math.ceil(math.log2(P)), 1) if P > 1 else 0
+    iq = jnp.arange(Q_max)
 
-    lookahead = prm.get("lookahead", 1.0)
+    def numroc_vec(rem, shift, nprocs, size):
+        """Vectorized NUMROC for procs 0..size-1 with owner shift."""
+        ip = (jnp.arange(size) - shift) % nprocs
+        nblocks = rem // nb
+        base = (nblocks // nprocs) * nb
+        extra = nblocks % nprocs
+        return (base + jnp.where(ip < extra, nb,
+                                 jnp.where(ip == extra, rem % nb, 0))
+                ).astype(f64)
 
     def fact_time(k):
         """Panel-k factorization cost per row rank (SimBLAS closed forms):
-        dger/dscal/idamax are Level-1/2 memory-bound."""
+        dger/dscal/idamax are Level-1/2 memory-bound.  Returns (P, B)."""
         rem = N - k * nb
-        pk = k % P
-        mloc = _numroc_vec(rem, nb, pk, P).astype(jnp.float64)
+        mloc = numroc_vec(rem, k % P, P, P_max)
         pf_bytes = 8.0 * (jnp.maximum(mloc * nb * nb - nb ** 3 / 3.0, 0.0)
                           + 3.0 * mloc * nb)
-        return pf_bytes / mem_bw + nb * (3 * theta) + nb * ar_lat
+        return pf_bytes[:, None] / mem_bw + nb * (3 * theta) + nb * ar_lat
 
-    def step(k, carry):
-        T, fact_done = carry
+    # The T carry lives in *ring-order* space: stored column i holds the
+    # absolute column (qk + i) % Q, so the broadcast root is always index
+    # 0 and the prefix-max chain never gathers.  Each panel advances the
+    # ring by exactly one column (qk = k % Q), so re-basing the carry for
+    # the next panel is the static-roll-plus-select below — padding
+    # columns (i >= Q) map to themselves throughout.  XLA CPU runs
+    # dynamic gathers and cumulative scans orders of magnitude slower
+    # than fusable elementwise chains on batched shapes, so both are
+    # expressed with static slices + selects (bitwise-identical: max is
+    # exact and the shifts are pure selection).
+    #
+    # ord-space NUMROC is panel-invariant: stored column i belongs to
+    # proc (i - 1) % Q of the *next* panel's distribution, every panel.
+    # bucket(1) == 1, so Q_max > 1 implies Q >= 2: the ord index of
+    # column (k+1) % Q — i.e. 1 % Q — is static.
+    idx1 = 1 if Q_max > 1 else 0
+
+    def cummax_cols(x):
+        """Inclusive prefix-max along axis 1 (Kogge-Stone shift-max)."""
+        s = 1
+        while s < Q_max:
+            shifted = jnp.concatenate(
+                [jnp.full_like(x[:, :s, :], -jnp.inf), x[:, :-s, :]],
+                axis=1)
+            x = jnp.maximum(x, shifted)
+            s *= 2
+        return x
+
+    def ring_rebase(T):
+        """Stored col i <- stored col (i+1)%Q on live cols, identity on
+        padding: one static roll plus two selects."""
+        if Q_max == 1:
+            return T
+        roll = jnp.concatenate([T[:, 1:, :], T[:, :1, :]], axis=1)
+        qcol = iq[None, :, None]
+        return jnp.where(
+            qcol < Q - 1, roll,
+            jnp.where(qcol == Q - 1,
+                      jnp.broadcast_to(T[:, :1, :], T.shape), T))
+
+    def step(k, T, fact_done):
         rem = N - k * nb
-        qk = k % Q
-        pk = k % P
-        mloc = _numroc_vec(rem, nb, pk, P).astype(jnp.float64)       # (P,)
-        nloc = _numroc_vec(jnp.maximum(rem - nb, 0), nb,
-                           (k + 1) % Q, Q).astype(jnp.float64)       # (Q,)
+        mloc = numroc_vec(rem, k % P, P, P_max)                    # (P,)
+        nloc = numroc_vec(jnp.maximum(rem - nb, 0), 1, Q, Q_max)   # (Q,) ord
 
         # 2. 1-ring broadcast along each row: prefix-max recurrence.
         # fact_done was computed in the previous iteration (lookahead):
         # the owning column factored panel k right after updating the
         # panel-k columns of step k-1, overlapping the rest of the update.
         panel_bytes = 8.0 * (mloc + nb) * nb             # (P,)
-        hop = alpha + panel_bytes / bcast_bw             # (P,)
-        order = (qk + jnp.arange(Q)) % Q                 # ring order, [qk,...]
-        Tord = T[:, order]                               # (P, Q)
-        d = Tord.at[:, 0].set(fact_done)                 # chain readiness
-        i = jnp.arange(Q, dtype=jnp.float64)[None, :]
-        a = hop[:, None] * i + jax.lax.cummax(d - hop[:, None] * i, axis=1)
-        arrival_ord = a.at[:, 0].set(fact_done)          # root holds panel
-        arrival = jnp.zeros_like(T).at[:, order].set(arrival_ord)
+        hop = alpha + panel_bytes[:, None] / bcast_bw    # (P, B)
+        hi = hop[:, None, :] * iq.astype(f64)[None, :, None]
+        d = (T - hi).at[:, 0, :].set(fact_done)          # chain readiness
+        a = hi + cummax_cols(d)
+        arrival = a.at[:, 0, :].set(fact_done)           # root holds panel
 
         # 3. row swaps: column ranks exchange the U strip (sync on colmax)
-        u_bytes = 8.0 * nb * nloc                        # (Q,)
-        swap = jnp.where(
-            u_bytes > 0,
-            sw_rounds * (alpha + (u_bytes / max(sw_rounds, 1)) / swap_bw)
-            + (4.0 * 8.0 * nb * nloc) / mem_bw,
-            0.0)[None, :] * (1.0 if P > 1 else 0.0)      # (1, Q)
-        ready = jnp.maximum(arrival, T)
-        if P > 1:
-            ready = jnp.broadcast_to(jnp.max(ready, axis=0, keepdims=True),
-                                     ready.shape)
-
         # 4. update: dtrsm + dgemm on the local tile
-        trsm = (nb * nb * nloc)[None, :] / peak + theta
-        gemm = (2.0 * mloc[:, None] * nloc[None, :] * nb
-                + 2.0 * mloc[:, None] * nloc[None, :]) / peak + theta
-        after_swap = ready + swap
-        T_new = after_swap + trsm + gemm
+        u_bytes = 8.0 * nb * nloc                        # (Q,)
+        trsm = (nb * nb * nloc)[:, None] / peak + theta  # (Q, B)
+        gemm = (2.0 * mloc[:, None, None] * nloc[None, :, None] * nb
+                + 2.0 * mloc[:, None, None] * nloc[None, :, None]) \
+            / peak + theta                               # (P, Q, B)
+        if P_max > 1:                    # P > 1 exactly (bucket(1) == 1)
+            swap = jnp.where(
+                u_bytes[:, None] > 0,
+                sw_rounds * (alpha + (u_bytes[:, None]
+                                      / jnp.maximum(sw_rounds, 1.0))
+                             / swap_bw)
+                + (4.0 * 8.0 * nb * nloc)[:, None] / mem_bw,
+                0.0)                                     # (Q, B)
+            # column sync: every rank of a column proceeds from the
+            # column max, so after_swap is row-independent — a (Q, B)
+            # row vector instead of a (P, Q, B) grid.
+            colmax = jnp.max(jnp.maximum(arrival, T), axis=0,
+                             where=row_on[:, None, None],
+                             initial=-jnp.inf)           # (Q, B)
+            after_swap = colmax + swap                   # (Q, B)
+            T_new = (after_swap + trsm)[None, :, :] + gemm
+            as_next = after_swap[idx1]                   # (B,) static slice
+        else:
+            after_swap = jnp.maximum(arrival, T)         # (1, Q, B)
+            T_new = after_swap + trsm[None, :, :] + gemm
+            as_next = after_swap[:, idx1, :]             # (P=1, B)
 
         # 1'. (lookahead) factor panel k+1 on its owning column, anchored
         # right after that column updates just the next panel's nb columns.
-        qn = (k + 1) % Q
-        mloc_n = _numroc_vec(jnp.maximum(rem - nb, 0), nb, (k + 1) % P,
-                             P).astype(jnp.float64)
-        gemm_nb = (2.0 * mloc_n * nb * nb) / peak + theta            # (P,)
-        fact_next_overlap = after_swap[:, qn] + gemm_nb + fact_time(k + 1)
-        fact_next_serial = T_new[:, qn] + fact_time(k + 1)
+        mloc_n = numroc_vec(jnp.maximum(rem - nb, 0), (k + 1) % P, P, P_max)
+        gemm_nb = (2.0 * mloc_n[:, None] * nb * nb) / peak + theta  # (P, B)
+        ft = fact_time(k + 1)
+        fact_next_overlap = as_next + gemm_nb + ft
+        fact_next_serial = T_new[:, idx1, :] + ft
         fact_next = (lookahead * jnp.minimum(fact_next_overlap,
                                              fact_next_serial)
                      + (1.0 - lookahead) * fact_next_serial)
@@ -149,18 +264,155 @@ def _simulate(N: int, nb: int, P: int, Q: int, prm: dict):
         # mid-update (HPL posts it asynchronously).
         return T_new, fact_next
 
-    T0 = jnp.zeros((P, Q), jnp.float64)
+    def body(k, carry):
+        T, F = carry
+        T2, F2 = step(k, T, F)
+        live = k < n_panels
+        # freeze once past the live panel count, then re-base the ring
+        # (frozen values must keep rotating with qk to stay column-stable;
+        # the final masked max is invariant under the live-column cycle)
+        return ring_rebase(jnp.where(live, T2, T)), jnp.where(live, F2, F)
+
+    T0 = jnp.zeros((P_max, Q_max, B), f64)
     F0 = fact_time(0)                    # panel 0: nothing to overlap with
-    T, _ = jax.lax.fori_loop(0, n_panels, step, (T0, F0))
-    total = jnp.max(T)
+    T, _ = jax.lax.fori_loop(0, n_panels_max, body, (T0, F0))
+    total = jnp.max(jnp.where(active[:, :, None], T, -jnp.inf),
+                    axis=(0, 1))                         # (B,)
     # back substitution: ~2 N^2 flops + N broadcasts (minor)
     total = total + 2.0 * N * N / (peak * P * Q) + N / nb * alpha
     return total
 
 
-def simulate_hpl_fast(cfg: HPLConfig, prm: FastSimParams) -> dict:
-    with jax.enable_x64(True):
-        t = float(_simulate(cfg.N, cfg.nb, cfg.P, cfg.Q,
-                            dataclasses.asdict(prm)))
+# --------------------------------------------------------- compile cache
+_TRACE_COUNT = 0
+
+
+def trace_count() -> int:
+    """How many times a simulator core has been (re)traced so far — a
+    compile counter for cache-hit assertions in tests and benchmarks."""
+    return _TRACE_COUNT
+
+
+def _sim_core_scalar(N, nb, P, Q, prm: FastSimParams,
+                     n_panels_max: int, P_max: int, Q_max: int):
+    """Scalar-params entry over the trailing-batch core (B=1)."""
+    prm1 = jax.tree_util.tree_map(
+        lambda x: jnp.asarray(x, jnp.float64)[None], prm)
+    return _sim_core(N, nb, P, Q, prm1, n_panels_max, P_max, Q_max)[0]
+
+
+@functools.lru_cache(maxsize=128)
+def _compiled(n_panels_max: int, P_max: int, Q_max: int, mode: str):
+    """mode: 'single' (scalar in/out) | 'params' (shared geometry, (B,)
+    params leaves — the trailing-batch fast path for what-if grids) |
+    'batch' (vmap over geometry and params for mixed-config sweeps)."""
+    core = _sim_core if mode == "params" else _sim_core_scalar
+
+    def fn(N, nb, P, Q, prm):
+        global _TRACE_COUNT
+        _TRACE_COUNT += 1
+        return core(N, nb, P, Q, prm, n_panels_max, P_max, Q_max)
+    return jax.jit(jax.vmap(fn) if mode == "batch" else fn)
+
+
+def _run_single(cfg: HPLConfig, prm: FastSimParams) -> float:
+    fn = _compiled(*bucket_key(cfg), "single")
+    return float(fn(np.int64(cfg.N), np.int64(cfg.nb),
+                    np.int64(cfg.P), np.int64(cfg.Q), _f64_params(prm)))
+
+
+def _stack_params(prm_list: Sequence[FastSimParams],
+                  lanes: Sequence[int]) -> FastSimParams:
+    # numpy leaves: jit converts them on dispatch, ~10x cheaper than
+    # building device arrays one field at a time
+    return FastSimParams(**{
+        n: np.asarray([float(getattr(prm_list[i], n)) for i in lanes],
+                      np.float64)
+        for n in _PARAM_FIELDS})
+
+
+def _pad_pow2(idxs: List[int]) -> List[int]:
+    pad = 1 << (len(idxs) - 1).bit_length()
+    return idxs + [idxs[-1]] * (pad - len(idxs))
+
+
+def simulate_time_traced(cfg: HPLConfig, prm: FastSimParams):
+    """Differentiable scalar HPL time for traced ``prm`` leaves (call
+    under ``jax.experimental.enable_x64``; config stays concrete).  This
+    is the autodiff surface used by ``calibrate.fit_fastsim_params``."""
+    return _sim_core_scalar(np.int64(cfg.N), np.int64(cfg.nb),
+                            np.int64(cfg.P), np.int64(cfg.Q), prm,
+                            *bucket_key(cfg))
+
+
+def _result(cfg: HPLConfig, t: float) -> dict:
     return {"time_s": t, "gflops": cfg.flops() / t / 1e9,
             "tflops": cfg.flops() / t / 1e12}
+
+
+def simulate_hpl_fast(cfg: HPLConfig, prm: FastSimParams) -> dict:
+    with enable_x64(True):
+        t = _run_single(cfg, prm)
+    return _result(cfg, t)
+
+
+# ---------------------------------------------------------- sweep engine
+Configs = Union[HPLConfig, Sequence[HPLConfig]]
+Params = Union[FastSimParams, Sequence[FastSimParams]]
+
+
+def sweep_hpl(configs: Configs, params: Params) -> List[dict]:
+    """Run a scenario sweep in as few compiled programs as possible.
+
+    ``configs`` and ``params`` are zipped; a single ``HPLConfig`` or
+    ``FastSimParams`` on either side broadcasts against the other.
+    Scenarios sharing an exact ``(N, nb, P, Q)`` run as one params-only
+    vmap (geometry stays scalar — the fast path for hardware what-if
+    grids); the remaining scenarios are grouped by shape bucket
+    (``bucket_key``) and each bucket runs as one fully-vmapped call.
+    Batches are padded to a power of two so repeat sweeps of any size
+    reuse the compile cache.  Results come back as one
+    ``simulate_hpl_fast``-style dict per scenario, in input order.
+    """
+    cfg_list = [configs] if isinstance(configs, HPLConfig) else list(configs)
+    prm_list = [params] if isinstance(params, FastSimParams) else list(params)
+    if len(cfg_list) == 1 and len(prm_list) > 1:
+        cfg_list = cfg_list * len(prm_list)
+    if len(prm_list) == 1 and len(cfg_list) > 1:
+        prm_list = prm_list * len(cfg_list)
+    if len(cfg_list) != len(prm_list):
+        raise ValueError(
+            f"sweep_hpl: {len(cfg_list)} configs vs {len(prm_list)} params "
+            "(must match, or one side must be a single scenario)")
+
+    by_cfg: Dict[Tuple[int, int, int, int], List[int]] = {}
+    for idx, cfg in enumerate(cfg_list):
+        by_cfg.setdefault((cfg.N, cfg.nb, cfg.P, cfg.Q), []).append(idx)
+
+    times = np.empty(len(cfg_list), np.float64)
+    mixed: Dict[Tuple[int, int, int], List[int]] = {}
+    with enable_x64(True):
+        for (N, nb, P, Q), idxs in by_cfg.items():
+            key = bucket_key(cfg_list[idxs[0]])
+            if len(idxs) == 1:
+                mixed.setdefault(key, []).append(idxs[0])
+                continue
+            lanes = _pad_pow2(idxs)
+            fn = _compiled(*key, "params")
+            out = np.asarray(fn(np.int64(N), np.int64(nb), np.int64(P),
+                                np.int64(Q), _stack_params(prm_list, lanes)))
+            times[idxs] = out[:len(idxs)]
+        for key, idxs in mixed.items():
+            if len(idxs) == 1:
+                times[idxs[0]] = _run_single(cfg_list[idxs[0]],
+                                             prm_list[idxs[0]])
+                continue
+            lanes = _pad_pow2(idxs)
+            geom = np.asarray([[cfg_list[i].N, cfg_list[i].nb,
+                                cfg_list[i].P, cfg_list[i].Q]
+                               for i in lanes], np.int64)
+            fn = _compiled(*key, "batch")
+            out = np.asarray(fn(geom[:, 0], geom[:, 1], geom[:, 2],
+                                geom[:, 3], _stack_params(prm_list, lanes)))
+            times[idxs] = out[:len(idxs)]
+    return [_result(cfg, float(t)) for cfg, t in zip(cfg_list, times)]

@@ -5,13 +5,16 @@ already done by launch/dryrun.py) and returns SimXLA's analytic step-time
 prediction; ``predict_cell_des`` runs the full DES with contention /
 stragglers.  ``whatif`` re-predicts under hardware deltas (faster links,
 more HBM bandwidth, straggler chips) — §V of the paper, TPU edition.
+``whatif_grid`` is the HPL edition at sweep scale: a cartesian grid of
+hardware deltas evaluated as one batched fastsim program.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import json
 from pathlib import Path
-from typing import Dict, Optional
+from typing import Dict, Mapping, Optional, Sequence
 
 from repro.configs import get_config, get_shape
 from .hardware.node import NodeModel, TPU_V5E
@@ -67,3 +70,39 @@ def whatif(arch: str, shape: str, mesh: str = "16x16", *,
     return {"baseline_s": base.step_s, "whatif_s": new.step_s,
             "speedup": base.step_s / max(new.step_s, 1e-12),
             "baseline": base, "whatif": new}
+
+
+def whatif_grid(cfg, base_params, axes: Mapping[str, Sequence[float]], *,
+                mode: str = "scale") -> list:
+    """Paper §V at sweep scale: evaluate a cartesian grid of hardware
+    what-ifs for one HPL config in a single batched fastsim program.
+
+    ``axes`` maps FastSimParams field names to multipliers
+    (``mode="scale"``, default) or absolute values (``mode="abs"``), e.g.
+    ``{"link_bw": [1, 2, 4], "mem_bw": [1.0, 1.25]}`` — 6 scenarios plus
+    the baseline, all served by one compile (bucketed sweep engine).
+
+    Returns one dict per grid point, in ``itertools.product`` order, with
+    the axis values, ``time_s``/``gflops``/``tflops``, and ``speedup``
+    over the unmodified baseline.
+    """
+    from .fastsim import sweep_hpl
+
+    if mode not in ("scale", "abs"):
+        raise ValueError(f"whatif_grid: mode must be scale|abs, got {mode}")
+    names = list(axes)
+    combos = list(itertools.product(*[axes[n] for n in names]))
+    grid = []
+    for combo in combos:
+        over = {n: (getattr(base_params, n) * v if mode == "scale" else v)
+                for n, v in zip(names, combo)}
+        grid.append(dataclasses.replace(base_params, **over))
+    res = sweep_hpl(cfg, [base_params] + grid)   # lane 0 = baseline
+    base_t = res[0]["time_s"]
+    out = []
+    for combo, r in zip(combos, res[1:]):
+        row = dict(zip(names, combo))
+        row.update(r)
+        row["speedup"] = base_t / r["time_s"]
+        out.append(row)
+    return out

@@ -208,17 +208,21 @@ class SimMPI:
 
     def alltoall(self, rank: int, group: List[int], nbytes_per_pair: float,
                  op_id):
-        """Pairwise exchange: n-1 rounds."""
+        """Pairwise exchange, n-1 rounds: in round k send to (me+k) mod n
+        and receive from (me-k) mod n, which covers every ordered pair for
+        any group size (an XOR pairing silently skips rounds whenever
+        me ^ k falls outside a non-power-of-two group)."""
         self.counters["colls"] += 1
         n = len(group)
         idx = {r: i for i, r in enumerate(group)}
         me = idx[rank]
         for k in range(1, n):
-            peer = group[me ^ k] if (me ^ k) < n else None
-            if peer is None:
-                continue
-            yield from self.sendrecv(rank, peer, nbytes_per_pair,
-                                     tag=hash((op_id, k)) & 0xffff)
+            dst = group[(me + k) % n]
+            src = group[(me - k) % n]
+            ev = self.isend(rank, dst, nbytes_per_pair,
+                            tag=hash((op_id, k)) & 0xffff)
+            yield from self.recv(src, rank, tag=hash((op_id, k)) & 0xffff)
+            yield ev
 
 
 class _Relay:

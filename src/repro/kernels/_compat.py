@@ -1,0 +1,9 @@
+"""Pallas API compatibility across jax generations.
+
+jax 0.4.x names the TPU compile options ``pltpu.TPUCompilerParams``;
+newer releases renamed it ``pltpu.CompilerParams``.
+"""
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams", None) \
+    or _pltpu.TPUCompilerParams

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from .._compat import CompilerParams as _CompilerParams
+
 
 NEG_INF = -1e30
 
@@ -110,7 +112,7 @@ def flash_attention_fwd(q, k, v, *, causal: bool = True, bq: int = 128,
             pltpu.VMEM((bq * r, hd), jnp.float32),   # acc
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
     )(q, k, v)

@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from .._compat import CompilerParams as _CompilerParams
+
 
 INF = 3.4e38
 
@@ -57,7 +59,7 @@ def masked_min_rows(adj, vals, *, bf: int = 256, bl: int = 256,
         out_shape=jax.ShapeDtypeStruct((F, 1), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bf, 1), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
     )(adj.astype(jnp.int8), vals2)
     return out[:, 0]

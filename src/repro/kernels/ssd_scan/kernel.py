@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from .._compat import CompilerParams as _CompilerParams
+
 
 
 def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *,
@@ -94,6 +96,6 @@ def ssd_scan(xh, dt, A, Bh, Ch, chunk: int = 256, *,
         out_shape=jax.ShapeDtypeStruct((b, s, h, p), xh.dtype),
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(xh, dt, A, Bh, Ch)

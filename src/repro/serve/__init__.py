@@ -1,3 +1,5 @@
 from .engine import ServeEngine, Request
+from .predict import HPLPredictionService, PredictRequest
 
-__all__ = ["ServeEngine", "Request"]
+__all__ = ["ServeEngine", "Request", "HPLPredictionService",
+           "PredictRequest"]

@@ -21,6 +21,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental.shard_map import shard_map
+
+# jax 0.4.x shard_map has no varying-axis type system; pvary is identity
+_pvary = getattr(lax, "pvary", lambda x, axis: x)
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
@@ -65,8 +68,8 @@ def pipeline_forward(layer_fn: Callable, stage_params, x, *,
 
         buf0 = jnp.zeros((mb,) + x_local.shape[1:], x_local.dtype)
         # initial carry must already be pod-varying for scan type stability
-        buf0 = lax.pvary(buf0, axis)
-        outs0 = lax.pvary(outs0, axis)
+        buf0 = _pvary(buf0, axis)
+        outs0 = _pvary(outs0, axis)
         (_, outs), _ = lax.scan(tick, (buf0, outs0),
                                 jnp.arange(n_ticks))
         # outs on the LAST stage holds the final microbatch outputs;

@@ -9,6 +9,11 @@ import pytest
 from repro.configs import get_config, reduced
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: paper-scale simulations (minutes, not seconds)")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)

@@ -35,8 +35,7 @@ from repro.train.step import make_train_state, make_train_step, state_specs
 cfg = dataclasses.replace(reduced(get_config('granite-34b')),
                           n_heads=8, n_kv_heads=1, head_dim=32, d_model=128,
                           d_ff=256, num_layers=2)
-mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = jax.make_mesh((2, 4), ('data', 'model'))
 rules = make_rules(cfg, mode='train', tp_size=4, dp_size=2, global_batch=4)
 model = build_model(cfg)
 with mesh, use_rules(rules, mesh):
@@ -77,8 +76,7 @@ MESH = %s
 cfg = dataclasses.replace(reduced(get_config('stablelm-3b')),
                           n_heads=8, n_kv_heads=8, head_dim=16, d_model=128,
                           d_ff=256, num_layers=2)
-mesh = jax.make_mesh(MESH, ('data', 'model'),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = jax.make_mesh(MESH, ('data', 'model'))
 rules = make_rules(cfg, mode='train', tp_size=MESH[1], dp_size=MESH[0],
                    global_batch=4)
 model = build_model(cfg)

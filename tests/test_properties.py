@@ -1,6 +1,10 @@
 """Hypothesis property tests on system invariants."""
 import math
 
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis
 import hypothesis.strategies as st
 import jax

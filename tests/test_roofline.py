@@ -87,7 +87,7 @@ os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=8'
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.roofline.hlo_parse import analyze
-mesh = jax.make_mesh((8,), ('x',), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = jax.make_mesh((8,), ('x',))
 a = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
 f = jax.jit(lambda a, b: a @ b,
             in_shardings=(NamedSharding(mesh, P(None, 'x')),

@@ -38,8 +38,7 @@ def test_rules_decode_small_batch_replicates_dp():
 def test_legalize_drops_nondivisible_axes():
     import jax
     from repro.sharding.specs import legalize
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
 
     class FakeMesh:
         shape = {"data": 16, "model": 16}

@@ -100,3 +100,20 @@ def test_alltoall_completes():
         eng.spawn(rank(r))
     eng.run_all()
     assert len(done) == 8
+
+
+@pytest.mark.parametrize("n", [3, 5, 6, 7])
+def test_alltoall_nonpow2_exchanges_every_pair(n):
+    """(me+k)%n pairing: every rank sends to all n-1 peers even when the
+    group is not a power of two (the old XOR pairing dropped pairs)."""
+    eng, mpi = _setup(n)
+    done = []
+
+    def rank(r):
+        yield from mpi.alltoall(r, list(range(n)), 4096, op_id=("a2a", n))
+        done.append(eng.now)
+    for r in range(n):
+        eng.spawn(rank(r))
+    eng.run_all()
+    assert len(done) == n
+    assert mpi.counters["p2p_msgs"] == n * (n - 1)

@@ -103,7 +103,7 @@ import os
 os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=2'
 import jax, jax.numpy as jnp, numpy as np
 from repro.sharding.pipeline import pipeline_forward
-mesh = jax.make_mesh((2,), ('pod',), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = jax.make_mesh((2,), ('pod',))
 W = jax.random.normal(jax.random.PRNGKey(0), (2, 16, 16)) * 0.3
 x = jax.random.normal(jax.random.PRNGKey(1), (8, 16))
 y = pipeline_forward(lambda w, xm: jnp.tanh(xm @ w), W, x, mesh=mesh, n_micro=4)
