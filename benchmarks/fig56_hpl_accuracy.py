@@ -68,9 +68,8 @@ def _simblas_prediction(N: int, nb: int, profile):
 def run(quick: bool = True):
     from repro.core.calibrate import calibrate
     from repro.core.apps.hpl import HPLConfig, HPLSim
-    from repro.core.fastsim import FastSimParams, simulate_hpl_fast
-    from repro.core.hardware.node import local_node
-    from repro.core.hardware.topology import FatTreeTwoLevel
+    from repro.core.fastsim import simulate_hpl_fast
+    from repro.platforms import get_platform
     import dataclasses
 
     rows = []
@@ -88,14 +87,12 @@ def run(quick: bool = True):
                    f"gemm_meas={measured['gemm']:.3f};"
                    f"gemm_sim={predicted['gemm']:.3f}",
     })
-    # (b) DES vs fastsim
-    node = local_node()
-    topo = FatTreeTwoLevel(16, 4, 2, link_bw=100e9 / 8)
+    # (b) DES vs fastsim on the local-machine platform
+    plat = get_platform("bdw-local")
+    prm = dataclasses.replace(plat.fastsim(), lookahead=0.0)
     for (n, b, p, q) in [(2048, 128, 4, 4), (4096, 128, 2, 8)]:
         cfg = HPLConfig(N=n, nb=b, P=p, Q=q)
-        des = HPLSim(cfg, node, topo).run()
-        prm = dataclasses.replace(
-            FastSimParams.from_node(node, link_bw=100e9 / 8), lookahead=0.0)
+        des = HPLSim(cfg, plat).run()
         fast = simulate_hpl_fast(cfg, prm)
         rel = abs(des.time_s - fast["time_s"]) / des.time_s
         rows.append({

@@ -17,12 +17,11 @@ import tracemalloc
 
 def run(quick: bool = True):
     from repro.core.apps.hpl import HPLConfig, HPLSim
-    from repro.core.fastsim import FastSimParams, simulate_hpl_fast
-    from repro.core.hardware.node import frontera_node
-    from repro.core.hardware.topology import paper_fat_tree
+    from repro.core.fastsim import simulate_hpl_fast
+    from repro.platforms import get_platform
 
     rows = []
-    node = frontera_node()
+    plat = get_platform("paper-fat-tree-10008")
     ranks_list = [512, 1152, 2048] if quick else [2048, 4608, 10000]
     N_des = 49152 if quick else 98304
     for ranks in ranks_list:
@@ -30,12 +29,13 @@ def run(quick: bool = True):
         while ranks % P:
             P -= 1
         Q = ranks // P
-        topo = paper_fat_tree()
         cfg = HPLConfig(N=N_des, nb=192, P=P, Q=Q)
         gc.collect()
         tracemalloc.start()
         t0 = time.perf_counter()
-        res = HPLSim(cfg, node, topo).run()
+        sim = HPLSim(cfg, plat)        # builds a fresh topology each run
+        n_links = sim.net.topo.n_links
+        res = sim.run()
         wall = time.perf_counter() - t0
         _, peak_mem = tracemalloc.get_traced_memory()
         tracemalloc.stop()
@@ -43,16 +43,16 @@ def run(quick: bool = True):
             "name": f"fig7.des_ranks{ranks}",
             "us_per_call": wall * 1e6,
             "derived": f"events={res.events};mem_mb={peak_mem/1e6:.0f};"
-                       f"simT={res.time_s:.2f}s;N={N_des}",
+                       f"links={n_links};simT={res.time_s:.2f}s;N={N_des}",
         })
     # fastsim at the paper's full matrix size
+    prm = plat.fastsim()
     for ranks in ([2048, 10000] if quick else [2048, 4608, 10000]):
         P = int(ranks ** 0.5)
         while ranks % P:
             P -= 1
         Q = ranks // P
-        cfg = HPLConfig(N=20_000_000, nb=384, P=P, Q=Q)
-        prm = FastSimParams.from_node(node, link_bw=100e9 / 8)
+        cfg = plat.hpl_config(P=P, Q=Q)
         t0 = time.perf_counter()
         res = simulate_hpl_fast(cfg, prm)
         wall = time.perf_counter() - t0

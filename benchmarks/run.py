@@ -25,6 +25,17 @@ MODULES = [
     "benchmarks.kernels_bench",         # Pallas kernels
 ]
 
+# --smoke: the fast subset CI runs on every push so benchmark entry
+# points can't silently rot (fig56/fig7 drive multi-minute DES runs and
+# stay out; they are exercised by --full trajectory runs).
+SMOKE_MODULES = [
+    "benchmarks.fig2_dgemm_model",
+    "benchmarks.table2_top500",
+    "benchmarks.sec5_whatif",
+    "benchmarks.sweep_bench",
+    "benchmarks.tpu_predict",
+]
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -34,12 +45,18 @@ def main() -> None:
                     help="comma-separated module suffixes")
     ap.add_argument("--json", action="store_true",
                     help="emit NDJSON rows instead of CSV")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI subset (quick configs, no DES-heavy "
+                         "modules)")
     args = ap.parse_args()
 
+    if args.smoke and args.full:
+        ap.error("--smoke and --full are mutually exclusive")
+    modules = SMOKE_MODULES if args.smoke else MODULES
     if not args.json:
         print("name,us_per_call,derived")
     failed = 0
-    for mod_name in MODULES:
+    for mod_name in modules:
         if args.only and not any(mod_name.endswith(o)
                                  for o in args.only.split(",")):
             continue

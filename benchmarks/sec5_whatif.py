@@ -12,26 +12,28 @@ from pathlib import Path
 
 
 def run(quick: bool = True):
-    from repro.core.apps.hpl import HPLConfig
-    from repro.core.fastsim import FastSimParams, sweep_hpl
-    from repro.core.hardware.node import frontera_node, pupmaya_node
+    import dataclasses
 
-    systems = [("frontera", frontera_node(), 9_282_848, (88, 91)),
-               ("pupmaya", pupmaya_node(), 4_748_928, (59, 72))]
+    from repro.core.fastsim import sweep_hpl
+    from repro.platforms import get_platform
+
+    systems = [get_platform("frontera"), get_platform("pupmaya")]
     cfgs, prms = [], []
-    for name, node, N, (P, Q) in systems:
-        for bw in (100e9 / 8, 200e9 / 8):
-            cfgs.append(HPLConfig(N=N, nb=384, P=P, Q=Q))
-            prms.append(FastSimParams.from_node(node, link_bw=bw))
+    for plat in systems:
+        base = plat.fastsim()
+        for scale in (1.0, 2.0):        # 100 vs 200 Gb/s fabric
+            cfgs.append(plat.hpl_config())
+            prms.append(dataclasses.replace(
+                base, link_bw=base.link_bw * scale))
     # both systems x both fabrics: one sweep, one compile per bucket
     res = sweep_hpl(cfgs, prms)
 
     rows = []
-    for i, (name, node, N, (P, Q)) in enumerate(systems):
+    for i, plat in enumerate(systems):
         r100, r200 = res[2 * i], res[2 * i + 1]
         gain = (r200["tflops"] / r100["tflops"] - 1) * 100
         rows.append({
-            "name": f"sec5.hpl_200g_{name}",
+            "name": f"sec5.hpl_200g_{plat.name}",
             "us_per_call": 0.0,
             "derived": f"tf100={r100['tflops']:.0f};tf200={r200['tflops']:.0f};"
                        f"gain={gain:+.1f}%;paper=+2.6%/+3.9%",

@@ -23,13 +23,13 @@ def _best(fn, reps: int = 3) -> float:
 
 
 def run(quick: bool = True):
-    from repro.core.apps.hpl import HPLConfig
-    from repro.core.fastsim import (FastSimParams, simulate_hpl_fast,
-                                    sweep_hpl, trace_count)
-    from repro.core.hardware.node import frontera_node
+    from repro.core.fastsim import (simulate_hpl_fast, sweep_hpl,
+                                    trace_count)
+    from repro.platforms import get_platform
 
-    cfg = HPLConfig(N=32768 if quick else 65536, nb=128, P=2, Q=4)
-    base = FastSimParams.from_node(frontera_node(), link_bw=100e9 / 8)
+    plat = get_platform("frontera")
+    cfg = plat.hpl_config(N=32768 if quick else 65536, nb=128, P=2, Q=4)
+    base = plat.fastsim()
     grid = [dataclasses.replace(base, link_bw=base.link_bw * s,
                                 gemm_eff=base.gemm_eff * e)
             for s, e in itertools.product(

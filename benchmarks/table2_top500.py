@@ -2,41 +2,39 @@
 prediction from public configs.  Paper: Frontera 22,566 TF predicted vs
 23,516 reported (-4.0%); PupMaya 7,558 vs 7,484 (+1.0%); paper sim wall
 times 4.8 h / 1.7 h — ours are seconds (fastsim), and both systems run
-through one sweep_hpl call (batched sweep engine)."""
+through one sweep_hpl call (batched sweep engine).
+
+Machine constants (grids, Nmax, reported Rmax) come from the platform
+registry — this module holds no hardware numbers.
+"""
 from __future__ import annotations
 
 import time
 
-SYSTEMS = [
-    # name, node_fn, nodes, Nmax, (P, Q), reported_tflops, paper_pred
-    ("frontera", "frontera_node", 8008, 9_282_848, (88, 91), 23516, 22566),
-    ("pupmaya", "pupmaya_node", 4248, 4_748_928, (59, 72), 7484, 7558),
-]
+SYSTEMS = ["frontera", "pupmaya"]
 
 
 def run(quick: bool = True):
-    from repro.core.apps.hpl import HPLConfig
     from repro.core import fastsim
-    from repro.core.hardware import node as node_mod
+    from repro.platforms import get_platform
 
-    cfgs, prms = [], []
-    for name, node_fn, nodes, N, (P, Q), reported, paper_pred in SYSTEMS:
-        node = getattr(node_mod, node_fn)()
-        cfgs.append(HPLConfig(N=N, nb=384, P=P, Q=Q))
-        prms.append(fastsim.FastSimParams.from_node(node, link_bw=100e9 / 8))
+    plats = [get_platform(name) for name in SYSTEMS]
+    cfgs = [p.hpl_config() for p in plats]
+    prms = [p.fastsim() for p in plats]
     t0 = time.perf_counter()
     results = fastsim.sweep_hpl(cfgs, prms)
     wall = time.perf_counter() - t0
 
     rows = []
-    for (name, _, _, _, _, reported, paper_pred), res in zip(SYSTEMS,
-                                                             results):
+    for plat, res in zip(plats, results):
+        reported = plat.scale.reported_tflops
+        paper_pred = plat.scale.paper_pred_tflops
         err = (res["tflops"] - reported) / reported * 100
         err_paper = (paper_pred - reported) / reported * 100
         rows.append({
-            "name": f"table2.{name}",
+            "name": f"table2.{plat.name}",
             "us_per_call": wall / len(SYSTEMS) * 1e6,
-            "derived": f"pred_tf={res['tflops']:.0f};reported={reported};"
+            "derived": f"pred_tf={res['tflops']:.0f};reported={reported:.0f};"
                        f"err={err:+.1f}%;paper_err={err_paper:+.1f}%;"
                        f"exec_h={res['time_s']/3600:.2f};"
                        f"sweep_wall_s={wall:.1f}",

@@ -14,25 +14,26 @@ from pathlib import Path
 def _hpl_on_tpu_rows():
     """Predict HPL Rmax on v5e meshes via the batched sweep engine.
 
-    N is sized to ~75% of pod HBM (8 bytes per matrix element); ICI
-    link bandwidth ~45 GB/s per direction, 1 us fabric latency."""
-    from repro.core.apps.hpl import HPLConfig
-    from repro.core.fastsim import FastSimParams, sweep_hpl
-    from repro.core.hardware.node import TPU_V5E
+    N is sized to ~75% of pod HBM (8 bytes per matrix element); chip
+    peak, HBM capacity, and ICI numbers come from the tpu-v5e-pod
+    registry entry."""
+    from repro.core.fastsim import sweep_hpl
+    from repro.platforms import get_platform
 
-    nb = 512
+    plat = get_platform("tpu-v5e-pod")
+    nb = plat.scale.hpl_nb
     meshes = [(4, 4), (8, 8), (16, 16)]
     cfgs = []
     for p, q in meshes:
-        n_max = math.sqrt(0.75 * 16e9 / 8 * p * q)
-        cfgs.append(HPLConfig(N=int(n_max) // nb * nb, nb=nb, P=p, Q=q))
-    prm = FastSimParams.from_node(TPU_V5E, link_bw=45e9, net_latency=1e-6)
+        n_max = math.sqrt(0.75 * plat.node.hbm_bytes / 8 * p * q)
+        cfgs.append(plat.hpl_config(N=int(n_max) // nb * nb, P=p, Q=q))
+    prm = plat.fastsim()
     t0 = time.perf_counter()
     res = sweep_hpl(cfgs, prm)          # one sweep over all mesh sizes
     wall = time.perf_counter() - t0
     rows = []
     for (p, q), cfg, r in zip(meshes, cfgs, res):
-        peak_tf = p * q * TPU_V5E.peak_flops / 1e12
+        peak_tf = p * q * plat.node.peak_flops / 1e12
         rows.append({
             "name": f"tpu.hpl_v5e_{p}x{q}",
             "us_per_call": wall / len(meshes) * 1e6,

@@ -14,32 +14,32 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-from repro.core.apps.hpl import HPLConfig, HPLSim
-from repro.core.fastsim import FastSimParams, simulate_hpl_fast
-from repro.core.hardware.node import frontera_node, local_node
-from repro.core.hardware.topology import FatTreeTwoLevel
+import dataclasses
+
+from repro.core.apps.hpl import HPLSim
+from repro.core.fastsim import simulate_hpl_fast
+from repro.platforms import get_platform
 
 
 def main():
     print("== 1. small-cluster HPL (DES + fastsim) ==")
-    node = local_node()
-    topo = FatTreeTwoLevel(16, 4, 2, link_bw=100e9 / 8)
-    cfg = HPLConfig(N=4096, nb=128, P=4, Q=4)
-    res = HPLSim(cfg, node, topo).run()
+    plat = get_platform("bdw-local")        # paper Table I machine
+    cfg = plat.hpl_config()
+    res = HPLSim(cfg, plat).run()
     print(f"  DES: {res.gflops:.0f} GF in {res.time_s:.3f}s simulated "
           f"({res.events} events)")
-    fast = simulate_hpl_fast(cfg, FastSimParams.from_node(
-        node, link_bw=100e9 / 8, lookahead=0.0))
+    fast = simulate_hpl_fast(
+        cfg, dataclasses.replace(plat.fastsim(), lookahead=0.0))
     print(f"  fastsim: {fast['gflops']:.0f} GF "
           f"(agreement {abs(1 - fast['time_s']/res.time_s)*100:.1f}%)")
 
     print("== 2. Frontera (TOP500 #5) prediction ==")
-    cfg = HPLConfig(N=9_282_848, nb=384, P=88, Q=91)
+    frontera = get_platform("frontera")
+    reported = frontera.scale.reported_tflops
     t0 = time.perf_counter()
-    fast = simulate_hpl_fast(cfg, FastSimParams.from_node(
-        frontera_node(), link_bw=100e9 / 8))
-    print(f"  predicted {fast['tflops']:.0f} TF vs 23,516 TF reported "
-          f"({(fast['tflops']-23516)/23516*100:+.1f}%), "
+    fast = simulate_hpl_fast(frontera.hpl_config(), frontera.fastsim())
+    print(f"  predicted {fast['tflops']:.0f} TF vs {reported:,.0f} TF "
+          f"reported ({(fast['tflops']-reported)/reported*100:+.1f}%), "
           f"simulated in {time.perf_counter()-t0:.1f}s "
           f"(paper's SystemC: 4.8 h)")
 

@@ -13,16 +13,15 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-from repro.core.apps.hpl import HPLConfig
-from repro.core.fastsim import FastSimParams
-from repro.core.hardware.node import frontera_node
 from repro.core.predict import whatif_grid
+from repro.platforms import get_platform
 
 
 def main():
     print("== HPL: fabric x memory what-if grid (Frontera, one batch) ==")
-    cfg = HPLConfig(N=9_282_848, nb=384, P=88, Q=91)
-    base = FastSimParams.from_node(frontera_node(), link_bw=100e9 / 8)
+    plat = get_platform("frontera")
+    cfg = plat.hpl_config()
+    base = plat.fastsim()
     grid = whatif_grid(cfg, base, {"link_bw": [1.0, 2.0, 4.0],
                                    "mem_bw": [1.0, 1.25]})
     for row in grid:

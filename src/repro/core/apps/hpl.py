@@ -53,9 +53,31 @@ class HPLConfig:
     bcast: str = "1ring"          # 1ring | long
     lookahead: int = 0            # modeled depth (0: panel on critical path)
 
+    def __post_init__(self):
+        if self.N < 1 or self.nb < 1:
+            raise ValueError(f"HPLConfig: N={self.N}, nb={self.nb} must be "
+                             ">= 1")
+        if self.P < 1 or self.Q < 1:
+            raise ValueError(f"HPLConfig: P={self.P}, Q={self.Q} must be "
+                             ">= 1")
+        if self.bcast not in ("1ring", "long"):
+            raise ValueError(f"HPLConfig: bcast={self.bcast!r} not in "
+                             "('1ring', 'long')")
+        if self.lookahead not in (0, 1):
+            raise ValueError(f"HPLConfig: lookahead={self.lookahead} must "
+                             "be 0 or 1")
+        # N % nb != 0 is legal: the trailing partial panel is modeled
+        # (ceil(N/nb) panels, last one N % nb wide) — see n_panels.
+
     @property
     def n_ranks(self) -> int:
         return self.P * self.Q
+
+    @property
+    def n_panels(self) -> int:
+        """ceil(N / nb): a trailing N % nb panel is simulated, not
+        silently dropped."""
+        return (self.N + self.nb - 1) // self.nb
 
     def flops(self) -> float:
         return (2.0 / 3.0) * self.N ** 3 + 1.5 * self.N ** 2
@@ -86,30 +108,31 @@ class HPLRank:
         P, Q, nb, N = cfg.P, cfg.Q, cfg.nb, cfg.N
         col_group = [self.q * P + pp for pp in range(P)]
         row_group = [qq * P + self.p for qq in range(Q)]
-        n_panels = N // nb
+        n_panels = cfg.n_panels            # ceil: trailing partial panel
 
         for k in range(n_panels):
             rem = N - k * nb
+            w = min(nb, rem)                # panel width (< nb on the last)
             qk = k % Q                      # owning process column
             pk = k % P                      # row owning the diagonal block
             mloc = numroc(rem, nb, (self.p - pk) % P, P)
-            nloc = numroc(rem - nb, nb, (self.q - (k + 1) % Q) % Q, Q)
-            panel_bytes = 8.0 * (mloc + nb) * nb
+            nloc = numroc(max(rem - w, 0), nb, (self.q - (k + 1) % Q) % Q, Q)
+            panel_bytes = 8.0 * (mloc + w) * w
 
             if self.q == qk:
                 # --- 1. panel factorization --------------------------------
                 t = 0.0
-                for j in range(nb):
+                for j in range(w):
                     t += blas.idamax(max(mloc - j, 1))
                     t += blas.dscal(max(mloc - j, 1))
-                    t += blas.dger(max(mloc - j, 1), nb - j - 1)
+                    t += blas.dger(max(mloc - j, 1), w - j - 1)
                 yield t
                 # pivot search allreduces: one aggregated column sync +
-                # nb analytic small allreduces (latency-bound)
+                # w analytic small allreduces (latency-bound)
                 yield from mpi.barrier(self.rank, col_group, ("pf", k, self.q))
                 ar_lat = 2 * math.ceil(math.log2(max(P, 2))) \
                     * (sim.net.topo.base_latency + mpi.overhead)
-                yield nb * ar_lat
+                yield w * ar_lat
                 # --- 2. broadcast along my row -----------------------------
                 if Q > 1:
                     yield from self._bcast_panel(row_group, qk, panel_bytes, k)
@@ -118,7 +141,7 @@ class HPLRank:
                     yield from self._bcast_panel(row_group, qk, panel_bytes, k)
 
             # --- 3. trailing row swaps (U strip) among column ranks --------
-            u_bytes = 8.0 * nb * max(nloc, 0)
+            u_bytes = 8.0 * w * max(nloc, 0)
             if P > 1 and u_bytes > 0:
                 rounds = math.ceil(math.log2(P))
                 peer_up = col_group[(self.p + 1) % P]
@@ -130,13 +153,13 @@ class HPLRank:
                     yield from mpi.recv(peer_dn, self.rank,
                                         tag=(k * 7 + r) % 65536)
                     yield ev
-                yield blas.dlaswp(nb, max(nloc, 1))
+                yield blas.dlaswp(w, max(nloc, 1))
 
             # --- 4. trailing update ---------------------------------------
             if nloc > 0:
-                yield blas.dtrsm(nb, nloc)
+                yield blas.dtrsm(w, nloc)
                 if mloc > 0:
-                    yield blas.dgemm(mloc, nloc, nb)
+                    yield blas.dgemm(mloc, nloc, w)
 
         sim.finish_times[self.rank] = sim.engine.now
 
@@ -163,14 +186,41 @@ class HPLRank:
 
 
 class HPLSim:
-    def __init__(self, cfg: HPLConfig, node: NodeModel, topology,
-                 ranks_per_node: int = 1):
+    """Full-DES HPL run.
+
+    ``HPLSim(cfg, platform)`` builds the hardware pair from a
+    ``repro.platforms.Platform`` spec (node model, topology, ranks per
+    node, and MPI-stack knobs all come from the spec); the explicit
+    ``HPLSim(cfg, node, topology)`` form stays for ad-hoc hardware.
+    """
+
+    def __init__(self, cfg: HPLConfig, node, topology=None,
+                 ranks_per_node: Optional[int] = None,
+                 mpi_overhead: Optional[float] = None):
+        if topology is None and hasattr(node, "des"):   # a Platform spec
+            platform = node
+            stack = platform.des()
+            node, topology = stack.node, stack.topology
+            if ranks_per_node is None:
+                ranks_per_node = stack.ranks_per_node
+            if mpi_overhead is None:
+                mpi_overhead = stack.mpi_overhead
+            capacity = platform.scale.n_ranks
+            if cfg.n_ranks > capacity:
+                raise ValueError(
+                    f"config needs {cfg.n_ranks} ranks but platform "
+                    f"{platform.name!r} has {capacity}")
+        elif topology is None:
+            raise TypeError("HPLSim needs a Platform or (node, topology)")
+        ranks_per_node = 1 if ranks_per_node is None else ranks_per_node
+        mpi_overhead = 5e-7 if mpi_overhead is None else mpi_overhead
         self.cfg = cfg
         self.node = node
         self.engine = Engine()
         self.net = Network(self.engine, topology)
         self.mpi = SimMPI(self.engine, self.net, cfg.n_ranks,
-                          rank_to_node=lambda r: r // ranks_per_node)
+                          rank_to_node=lambda r: r // ranks_per_node,
+                          overhead=mpi_overhead)
         # per-rank BLAS: a rank uses its share of the node
         share = dataclasses.replace(
             node, peak_flops=node.peak_flops / ranks_per_node,

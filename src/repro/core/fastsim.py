@@ -93,7 +93,7 @@ def _bucket(n: int) -> int:
 
 def bucket_key(cfg: HPLConfig) -> Tuple[int, int, int]:
     """(n_panels_max, P_max, Q_max) compile-cache key for a config."""
-    return (_bucket(max(cfg.N // cfg.nb, 1)), _bucket(cfg.P), _bucket(cfg.Q))
+    return (_bucket(cfg.n_panels), _bucket(cfg.P), _bucket(cfg.Q))
 
 
 # ------------------------------------------------------------ traced core
@@ -103,7 +103,7 @@ def _sim_core(N, nb, P, Q, prm: FastSimParams,
 
     Shapes are the static bucket (P_max, Q_max) and the loop runs
     n_panels_max iterations; rows p >= P, columns q >= Q and panels
-    k >= N//nb are padding, masked so they never touch live lanes (the
+    k >= ceil(N/nb) are padding, masked so they never touch live lanes (the
     ring-broadcast permutation maps padding columns to themselves, the
     column-sync max and the final max are mask-reduced, and the loop
     carry freezes once k reaches the live panel count).
@@ -142,8 +142,14 @@ def _sim_core(N, nb, P, Q, prm: FastSimParams,
     row_on = jnp.arange(P_max) < P
     col_on = jnp.arange(Q_max) < Q
     active = row_on[:, None] & col_on[None, :]
-    n_panels = N // nb
+    # ceil: a trailing N % nb panel is simulated at its true width
+    n_panels = (N + nb - 1) // nb
     iq = jnp.arange(Q_max)
+
+    def width(rem):
+        """Panel width: nb except on the trailing partial panel (and 0 on
+        padding iterations past the live panel count)."""
+        return jnp.clip(jnp.minimum(nb, rem), 0)
 
     def numroc_vec(rem, shift, nprocs, size):
         """Vectorized NUMROC for procs 0..size-1 with owner shift."""
@@ -159,10 +165,11 @@ def _sim_core(N, nb, P, Q, prm: FastSimParams,
         """Panel-k factorization cost per row rank (SimBLAS closed forms):
         dger/dscal/idamax are Level-1/2 memory-bound.  Returns (P, B)."""
         rem = N - k * nb
+        wf = width(rem).astype(f64)
         mloc = numroc_vec(rem, k % P, P, P_max)
-        pf_bytes = 8.0 * (jnp.maximum(mloc * nb * nb - nb ** 3 / 3.0, 0.0)
-                          + 3.0 * mloc * nb)
-        return pf_bytes[:, None] / mem_bw + nb * (3 * theta) + nb * ar_lat
+        pf_bytes = 8.0 * (jnp.maximum(mloc * wf * wf - wf ** 3 / 3.0, 0.0)
+                          + 3.0 * mloc * wf)
+        return pf_bytes[:, None] / mem_bw + wf * (3 * theta) + wf * ar_lat
 
     # The T carry lives in *ring-order* space: stored column i holds the
     # absolute column (qk + i) % Q, so the broadcast root is always index
@@ -206,14 +213,16 @@ def _sim_core(N, nb, P, Q, prm: FastSimParams,
 
     def step(k, T, fact_done):
         rem = N - k * nb
+        wf = width(rem).astype(f64)                      # panel width
         mloc = numroc_vec(rem, k % P, P, P_max)                    # (P,)
-        nloc = numroc_vec(jnp.maximum(rem - nb, 0), 1, Q, Q_max)   # (Q,) ord
+        nloc = numroc_vec(jnp.maximum(rem - width(rem), 0), 1, Q,
+                          Q_max)                                   # (Q,) ord
 
         # 2. 1-ring broadcast along each row: prefix-max recurrence.
         # fact_done was computed in the previous iteration (lookahead):
         # the owning column factored panel k right after updating the
         # panel-k columns of step k-1, overlapping the rest of the update.
-        panel_bytes = 8.0 * (mloc + nb) * nb             # (P,)
+        panel_bytes = 8.0 * (mloc + wf) * wf             # (P,)
         hop = alpha + panel_bytes[:, None] / bcast_bw    # (P, B)
         hi = hop[:, None, :] * iq.astype(f64)[None, :, None]
         d = (T - hi).at[:, 0, :].set(fact_done)          # chain readiness
@@ -222,9 +231,9 @@ def _sim_core(N, nb, P, Q, prm: FastSimParams,
 
         # 3. row swaps: column ranks exchange the U strip (sync on colmax)
         # 4. update: dtrsm + dgemm on the local tile
-        u_bytes = 8.0 * nb * nloc                        # (Q,)
-        trsm = (nb * nb * nloc)[:, None] / peak + theta  # (Q, B)
-        gemm = (2.0 * mloc[:, None, None] * nloc[None, :, None] * nb
+        u_bytes = 8.0 * wf * nloc                        # (Q,)
+        trsm = (wf * wf * nloc)[:, None] / peak + theta  # (Q, B)
+        gemm = (2.0 * mloc[:, None, None] * nloc[None, :, None] * wf
                 + 2.0 * mloc[:, None, None] * nloc[None, :, None]) \
             / peak + theta                               # (P, Q, B)
         if P_max > 1:                    # P > 1 exactly (bucket(1) == 1)
@@ -233,7 +242,7 @@ def _sim_core(N, nb, P, Q, prm: FastSimParams,
                 sw_rounds * (alpha + (u_bytes[:, None]
                                       / jnp.maximum(sw_rounds, 1.0))
                              / swap_bw)
-                + (4.0 * 8.0 * nb * nloc)[:, None] / mem_bw,
+                + (4.0 * 8.0 * wf * nloc)[:, None] / mem_bw,
                 0.0)                                     # (Q, B)
             # column sync: every rank of a column proceeds from the
             # column max, so after_swap is row-independent — a (Q, B)
@@ -250,9 +259,11 @@ def _sim_core(N, nb, P, Q, prm: FastSimParams,
             as_next = after_swap[:, idx1, :]             # (P=1, B)
 
         # 1'. (lookahead) factor panel k+1 on its owning column, anchored
-        # right after that column updates just the next panel's nb columns.
+        # right after that column updates just the next panel's columns.
         mloc_n = numroc_vec(jnp.maximum(rem - nb, 0), (k + 1) % P, P, P_max)
-        gemm_nb = (2.0 * mloc_n[:, None] * nb * nb) / peak + theta  # (P, B)
+        w_next = width(rem - nb).astype(f64)
+        gemm_nb = (2.0 * mloc_n[:, None] * w_next * wf) / peak \
+            + theta                                                 # (P, B)
         ft = fact_time(k + 1)
         fact_next_overlap = as_next + gemm_nb + ft
         fact_next_serial = T_new[:, idx1, :] + ft

@@ -5,11 +5,14 @@ bandwidth-bound ops cost ``bytes / (bw x efficiency)``.  Peak numbers and
 efficiencies are *inputs* measured by microbenchmark (core/calibrate.py)
 or taken from public specs.  The same form covers CPU, GPU and TPU chips
 (heterogeneous-architecture extension of CSMethod).
+
+Machine constants live in ``repro.platforms.registry``; the named
+factories below (``local_node``, ``frontera_node``, ...) are thin
+compatibility shims over the registry.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,47 +41,35 @@ class NodeModel:
         return nbytes / (self.mem_bw * self.mem_efficiency) + self.blas_latency
 
 
-def xeon_node(name: str, sockets: int, cores_per_socket: int,
-              avx_clock_ghz: float, flops_per_cycle: int = 32,
-              ddr_gbs: float = 100.0, **kw) -> NodeModel:
-    cores = sockets * cores_per_socket
-    return NodeModel(name=name,
-                     peak_flops=cores * flops_per_cycle * avx_clock_ghz * 1e9,
-                     mem_bw=ddr_gbs * 1e9, cores=cores, **kw)
+# --- registry-backed shims ---------------------------------------------------
+# (Xeon-style peak derivation lives in platforms.spec.NodeSpec.xeon.)
 
+def _registry_node(platform_name: str) -> NodeModel:
+    from repro.platforms.build import build_node
+    from repro.platforms.registry import get_platform
+    return build_node(get_platform(platform_name).node)
 
-# --- systems from the paper -------------------------------------------------
 
 def local_node() -> NodeModel:
-    """Paper Table I: 2x Xeon E5-2699 v4 Broadwell, 22c @2.2 GHz, DDR4-2400.
-    Broadwell AVX2: 16 DP flops/cycle; AVX base ~1.8 GHz."""
-    return xeon_node("bdw-2699v4", 2, 22, 1.8, flops_per_cycle=16,
-                     ddr_gbs=153.6)
+    """Paper Table I local Broadwell machine (registry: bdw-local)."""
+    return _registry_node("bdw-local")
 
 
 def frontera_node() -> NodeModel:
-    """Frontera: 2x Xeon Platinum 8280 28c; AVX-512 sustained ~1.8 GHz
-    (paper: nominal 2.7 GHz can't be held with AVX-512), 32 DP flops/cyc,
-    DDR4-2933 x 6ch x 2."""
-    return xeon_node("clx-8280", 2, 28, 1.8, flops_per_cycle=32,
-                     ddr_gbs=2 * 6 * 23.46)
+    """Frontera's CLX-8280 node (registry: frontera)."""
+    return _registry_node("frontera")
 
 
 def pupmaya_node() -> NodeModel:
-    """PupMaya: 2x Xeon Gold 6148 20c; AVX-512 sustained ~1.6 GHz,
-    DDR4-2666."""
-    return xeon_node("skx-6148", 2, 20, 1.6, flops_per_cycle=32,
-                     ddr_gbs=2 * 6 * 21.3)
+    """PupMaya's SKX-6148 node (registry: pupmaya)."""
+    return _registry_node("pupmaya")
 
 
-# --- TPU adaptation target ---------------------------------------------------
-
-TPU_V5E = NodeModel(
-    name="tpu-v5e",
-    peak_flops=197e12,        # bf16
-    mem_bw=819e9,
-    cores=1,
-    gemm_efficiency=0.90,     # large-matmul MXU efficiency (public MLPerf-ish)
-    mem_efficiency=0.85,
-    blas_latency=2e-6,        # per-op dispatch overhead
-)
+def __getattr__(name):
+    # TPU_V5E stays importable as a constant; resolved (and cached) from
+    # the registry on first access so the numbers live in one place.
+    if name == "TPU_V5E":
+        value = _registry_node("tpu-v5e-pod")
+        globals()[name] = value
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -27,6 +27,9 @@ class Topology:
 
     @property
     def n_links(self) -> int:
+        """True link count — the memory-scaling denominator of Fig 7.
+        Subclasses that don't keep a flat ``links`` collection override
+        this with their structural count."""
         return len(getattr(self, "links", []))
 
 
@@ -70,19 +73,33 @@ class FatTreeTwoLevel(Topology):
         return [self.node_up[src], self.edge_up[se][c],
                 self.edge_down[de][c], self.node_down[dst]]
 
+    @property
+    def n_links(self) -> int:
+        return 2 * self.n_nodes + 2 * self.n_edge * self.n_core
+
+
+def _registry_topology(platform_name: str, n_nodes: Optional[int] = None,
+                       **fabric_over):
+    import dataclasses as _dc
+
+    from repro.platforms.build import build_topology
+    from repro.platforms.registry import get_platform
+    plat = get_platform(platform_name)
+    fab = _dc.replace(plat.fabric, **fabric_over) if fabric_over \
+        else plat.fabric
+    return build_topology(fab, plat.scale.n_nodes if n_nodes is None
+                          else n_nodes)
+
 
 def paper_fat_tree(link_bw: float = 100e9 / 8) -> FatTreeTwoLevel:
-    """The paper's scalability rig: 10,008 nodes, 556 36-port edge switches
-    (18 down / 18 up), 18 core switches."""
-    return FatTreeTwoLevel(10008, 18, 18, link_bw)
+    """The paper's Fig 7 rig (registry: paper-fat-tree-10008)."""
+    return _registry_topology("paper-fat-tree-10008", link_bw=link_bw)
 
 
 def frontera_fat_tree(n_nodes: int = 8008,
                       link_bw: float = 100e9 / 8) -> FatTreeTwoLevel:
-    """Frontera: 8,008 nodes, 6 core switches, ~182 leaf switches, 44 nodes
-    per leaf on HDR100 (pairs into HDR200 leaf ports), 90 ns/hop."""
-    return FatTreeTwoLevel(n_nodes, 44, 6, link_bw, hop_latency=90e-9,
-                           uplink_bw=200e9 / 8 * 3)  # 18 HDR200 uplinks / 6 cores
+    """Frontera's HDR fat-tree (registry: frontera)."""
+    return _registry_topology("frontera", n_nodes=n_nodes, link_bw=link_bw)
 
 
 class Dragonfly(Topology):
@@ -137,19 +154,24 @@ class Dragonfly(Topology):
                 mid = (sg + dg) % self.g   # deterministic "random" Valiant
                 if mid not in (sg, dg):
                     groups = [sg, mid, dg]
+            # The aggregated (a, b) global link attaches to router
+            # (b mod a_count) in group a — the egress — and lands on
+            # router (a mod a_count) in group b — the ingress.
             cur_r = sr
             for a, b in zip(groups[:-1], groups[1:]):
-                # egress router for the (a,b) global link: (b mod a_count)
                 egress = b % self.a
                 if cur_r != egress:
                     path.append(self.local[(a, cur_r, egress)])
                 path.append(self.glob[(a, b)])
-                cur_r = b % self.a if False else (a % self.a)
-                cur_r = egress  # ingress router index mirrors egress choice
+                cur_r = a % self.a
             if cur_r != dr:
                 path.append(self.local[(dg, cur_r, dr)])
         path.append(self.node_down[dst])
         return path
+
+    @property
+    def n_links(self) -> int:
+        return 2 * self.n_nodes + len(self.local) + len(self.glob)
 
 
 class Torus(Topology):
@@ -230,3 +252,7 @@ class MultiPod(Topology):
         return (self.pods[sp].route(sl, 0) + [self.dcn_up[sp],
                                               self.dcn_down[dp]]
                 + self.pods[dp].route(0, dl))
+
+    @property
+    def n_links(self) -> int:
+        return sum(p.n_links for p in self.pods) + 2 * len(self.pods)

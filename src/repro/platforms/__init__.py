@@ -1,0 +1,35 @@
+"""Platform layer: declarative machine specs driving both simulation
+backends (DESIGN.md §12).
+
+    from repro.platforms import get_platform
+    plat = get_platform("frontera")
+    node, topo, rpn, overhead = plat.des()     # discrete-event stack
+    prm = plat.fastsim()                       # vectorized fastsim params
+    cfg = plat.hpl_config()                    # the machine's Rmax run
+
+Bridge utilities (``fit_fastsim_to_des``) are exposed lazily so the DES
+path never drags in jax through this package's import.
+"""
+from .spec import (FabricSpec, MPIStackSpec, NodeSpec, Platform,
+                   ScaleSpec)
+from .registry import get_platform, list_platforms, register
+from .build import DESStack, build_des, build_fastsim, build_node, \
+    build_topology
+
+__all__ = ["FabricSpec", "MPIStackSpec", "NodeSpec", "Platform",
+           "ScaleSpec", "get_platform", "list_platforms", "register",
+           "DESStack", "build_des", "build_fastsim", "build_node",
+           "build_topology", "fit_fastsim_to_des", "des_probe_runs",
+           "BridgeFit"]
+
+_BRIDGE_NAMES = ("fit_fastsim_to_des", "des_probe_runs", "BridgeFit",
+                 "DEFAULT_PROBES", "DEFAULT_FIT_FIELDS")
+
+
+def __getattr__(name):
+    # bridge imports apps.hpl + calibrate; resolve lazily to keep this
+    # package importable from inside core's own import chain
+    if name in _BRIDGE_NAMES:
+        from . import bridge
+        return getattr(bridge, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -7,11 +7,17 @@ what-if) queue up and ``flush`` drains them in micro-batches through
 of compiles (shape-bucket LRU cache) and one vmapped dispatch per
 (bucket, wave) — the serving answer to the paper's 4.8-hour-per-scenario
 SystemC baseline.
+
+Requests can name a registered platform instead of carrying explicit
+params: ``PredictRequest(rid=1, platform="frontera")`` serves that
+machine's published HPL run from its spec (DES-calibrated fastsim
+params included), so the endpoint can predict any registry machine by
+name.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Mapping, Optional, Sequence
 
 from repro.core.apps.hpl import HPLConfig
 from repro.core.fastsim import FastSimParams, sweep_hpl, trace_count
@@ -20,8 +26,9 @@ from repro.core.fastsim import FastSimParams, sweep_hpl, trace_count
 @dataclasses.dataclass
 class PredictRequest:
     rid: int
-    cfg: HPLConfig
-    params: FastSimParams
+    cfg: Optional[HPLConfig] = None
+    params: Optional[FastSimParams] = None
+    platform: Optional[str] = None       # registry name; fills cfg/params
     result: Optional[dict] = None
 
 
@@ -34,7 +41,22 @@ class HPLPredictionService:
         self.stats = {"requests": 0, "batches": 0, "scenarios": 0,
                       "traces": 0}
 
+    @staticmethod
+    def _resolve(req: PredictRequest) -> None:
+        if req.params is None or req.cfg is None:
+            if req.platform is None:
+                raise ValueError(
+                    f"request {req.rid}: needs (cfg, params) or a "
+                    "platform name")
+            from repro.platforms import get_platform
+            plat = get_platform(req.platform)
+            if req.params is None:
+                req.params = plat.fastsim()
+            if req.cfg is None:
+                req.cfg = plat.hpl_config()
+
     def submit(self, req: PredictRequest) -> None:
+        self._resolve(req)
         self.stats["requests"] += 1
         self._queue.append(req)
 
@@ -66,3 +88,13 @@ class HPLPredictionService:
         for req in scenarios:
             self.submit(req)
         return self.flush()
+
+    def predict_platforms(self, names: Sequence[str],
+                          cfg: Optional[HPLConfig] = None,
+                          ) -> Mapping[str, dict]:
+        """Predict a batch of registry machines by name (their published
+        HPL runs, or a shared ``cfg`` override) in one sweep."""
+        reqs = [PredictRequest(rid=i, cfg=cfg, platform=name)
+                for i, name in enumerate(names)]
+        out = self.predict_batch(reqs)
+        return {name: out[i] for i, name in enumerate(names)}

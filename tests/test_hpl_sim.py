@@ -57,6 +57,48 @@ def test_table2_pupmaya_prediction_band():
     assert abs(res["tflops"] - 7484) / 7484 < 0.10, res["tflops"]
 
 
+def test_hplconfig_validation_rejects_nonsense():
+    with pytest.raises(ValueError):
+        HPLConfig(N=0, nb=128, P=2, Q=2)
+    with pytest.raises(ValueError):
+        HPLConfig(N=1024, nb=0, P=2, Q=2)
+    with pytest.raises(ValueError):
+        HPLConfig(N=1024, nb=128, P=0, Q=2)
+    with pytest.raises(ValueError):
+        HPLConfig(N=1024, nb=128, P=2, Q=-1)
+    with pytest.raises(ValueError):
+        HPLConfig(N=1024, nb=128, P=2, Q=2, bcast="ring9")
+    with pytest.raises(ValueError):
+        HPLConfig(N=1024, nb=128, P=2, Q=2, lookahead=3)
+
+
+def test_partial_trailing_panel_is_modeled():
+    """N=1000, nb=96: 10 full panels + one 40-wide panel.  Both
+    simulators must charge for the extra panel (not silently drop it)
+    and still agree with each other."""
+    node = local_node()
+    topo = FatTreeTwoLevel(16, 4, 2, link_bw=100e9 / 8)
+    prm = dataclasses.replace(
+        FastSimParams.from_node(node, link_bw=100e9 / 8), lookahead=0.0)
+
+    cfg_partial = HPLConfig(N=1000, nb=96, P=2, Q=2)
+    cfg_floor = HPLConfig(N=960, nb=96, P=2, Q=2)
+    assert cfg_partial.n_panels == 11 and cfg_floor.n_panels == 10
+
+    des_partial = HPLSim(cfg_partial, node, topo).run()
+    des_floor = HPLSim(cfg_floor, node, topo).run()
+    fast_partial = simulate_hpl_fast(cfg_partial, prm)
+    fast_floor = simulate_hpl_fast(cfg_floor, prm)
+
+    # the trailing 40 columns cost strictly positive time in both worlds
+    assert des_partial.time_s > des_floor.time_s
+    assert fast_partial["time_s"] > fast_floor["time_s"]
+    # and the two fidelities still tell the same story
+    rel = abs(des_partial.time_s - fast_partial["time_s"]) \
+        / des_partial.time_s
+    assert rel < 0.20, (des_partial.time_s, fast_partial["time_s"])
+
+
 def test_whatif_network_upgrade_small_gain():
     """Paper §V: doubling fabric bandwidth buys only a few percent."""
     cfg = HPLConfig(N=1_000_000, nb=384, P=32, Q=32)

@@ -1,0 +1,131 @@
+"""Topology routing validity and structural link counts.
+
+The dragonfly route walker reconstructs each hop from link identity and
+checks the path is physically consistent: every link exists in the
+topology's link collections, consecutive hops share a router, global
+links are entered at their egress router and exited at their ingress
+router, and no link repeats (loop-free)."""
+import math
+
+import pytest
+
+from repro.core.hardware.topology import (Dragonfly, FatTreeTwoLevel,
+                                          MultiPod, Torus)
+
+
+def _dragonfly_link_table(t: Dragonfly):
+    table = {}
+    for i, l in enumerate(t.node_up):
+        table[id(l)] = ("up", i)
+    for i, l in enumerate(t.node_down):
+        table[id(l)] = ("down", i)
+    for (g, i, j), l in t.local.items():
+        table[id(l)] = ("local", g, i, j)
+    for (s, d), l in t.glob.items():
+        table[id(l)] = ("glob", s, d)
+    return table
+
+
+def _walk_dragonfly(t: Dragonfly, src: int, dst: int):
+    """Validate route(src, dst) hop by hop; returns the path."""
+    path = t.route(src, dst)
+    table = _dragonfly_link_table(t)
+    assert len({id(l) for l in path}) == len(path), "loop: repeated link"
+    for l in path:
+        assert id(l) in table, "foreign link in path"
+    if src == dst:
+        assert path == []
+        return path
+    sg, sr = t._locate(src)
+    dg, dr = t._locate(dst)
+    assert table[id(path[0])] == ("up", src)
+    assert table[id(path[-1])] == ("down", dst)
+    g, r = sg, sr
+    for l in path[1:-1]:
+        kind = table[id(l)]
+        if kind[0] == "local":
+            _, lg, li, lj = kind
+            assert (lg, li) == (g, r), "local hop leaves wrong router"
+            assert li != lj
+            r = lj
+        else:
+            _, ls, ld = kind
+            assert ls == g, "global hop from wrong group"
+            assert r == ld % t.a, "global hop not at its egress router"
+            g, r = ld, ls % t.a          # land on the ingress router
+    assert (g, r) == (dg, dr), "path does not terminate at dst router"
+    return path
+
+
+@pytest.mark.parametrize("nonminimal", [False, True])
+def test_dragonfly_all_pairs_routes_valid(nonminimal):
+    t = Dragonfly(n_groups=4, routers_per_group=3, nodes_per_router=2,
+                  link_bw=1e9, nonminimal=nonminimal)
+    for src in range(t.n_nodes):
+        for dst in range(t.n_nodes):
+            _walk_dragonfly(t, src, dst)
+
+
+def test_dragonfly_minimal_uses_single_global_hop():
+    t = Dragonfly(n_groups=5, routers_per_group=4, nodes_per_router=2,
+                  link_bw=1e9)
+    table = _dragonfly_link_table(t)
+    for src, dst in [(0, 39), (8, 17), (3, 30)]:
+        hops = [table[id(l)][0] for l in t.route(src, dst)]
+        if t._locate(src)[0] != t._locate(dst)[0]:
+            assert hops.count("glob") == 1
+
+
+def test_dragonfly_nonminimal_detours_through_mid_group():
+    t = Dragonfly(n_groups=5, routers_per_group=4, nodes_per_router=2,
+                  link_bw=1e9, nonminimal=True)
+    table = _dragonfly_link_table(t)
+    # sg=0, dg=3 -> mid = 3 % 5 = 3 == dg, stays minimal; sg=1, dg=3 ->
+    # mid = 4: two global hops through group 4
+    src, dst = t.p * t.a * 1, t.p * t.a * 3      # first node of groups 1, 3
+    globs = [table[id(l)] for l in t.route(src, dst)
+             if table[id(l)][0] == "glob"]
+    assert globs == [("glob", 1, 4), ("glob", 4, 3)]
+    _walk_dragonfly(t, src, dst)
+
+
+# ----------------------------------------------------------- link counts
+
+def test_fat_tree_n_links_counts_every_physical_link():
+    t = FatTreeTwoLevel(n_nodes=100, nodes_per_edge=18, n_core=6,
+                        link_bw=1e9)
+    n_edge = math.ceil(100 / 18)
+    assert t.n_links == 2 * 100 + 2 * n_edge * 6
+    assert t.n_links == (len(t.node_up) + len(t.node_down)
+                         + sum(len(row) for row in t.edge_up)
+                         + sum(len(row) for row in t.edge_down))
+
+
+def test_dragonfly_n_links_counts_every_physical_link():
+    t = Dragonfly(n_groups=4, routers_per_group=3, nodes_per_router=2,
+                  link_bw=1e9)
+    expect = (2 * t.n_nodes                  # node up/down
+              + 4 * 3 * 2                    # local: a*(a-1) per group
+              + 4 * 3)                       # global: g*(g-1) ordered pairs
+    assert t.n_links == expect
+
+
+def test_torus_n_links_counts_every_physical_link():
+    t = Torus((4, 4, 2), link_bw=1e9)
+    assert t.n_links == 32 * 3 * 2           # n * dims * 2 directions
+
+
+def test_multipod_n_links_sums_pods_plus_dcn():
+    pods = [Torus((4, 4), link_bw=1e9) for _ in range(3)]
+    t = MultiPod(pods, pod_size=16)
+    assert t.n_links == 3 * (16 * 2 * 2) + 2 * 3
+    # cross-pod routes traverse the DCN exactly once each way
+    path = t.route(0, 17)
+    assert t.dcn_up[0] in path and t.dcn_down[1] in path
+
+
+def test_torus_route_is_shortest_wrap():
+    t = Torus((8, 8), link_bw=1e9)
+    # 0 -> (0, 7): one hop in the wrap direction, not seven forward
+    assert len(t.route(0, 7)) == 1
+    assert len(t.route(0, t.node_at((4, 4)))) == 8
