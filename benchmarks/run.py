@@ -22,6 +22,7 @@ MODULES = [
     "benchmarks.sec5_whatif",           # §V: what-if analyses
     "benchmarks.sweep_bench",           # batched sweep engine vs loop
     "benchmarks.tpu_predict",           # TPU adaptation table
+    "benchmarks.trace_breakdown",       # trace-derived comm/compute split
     "benchmarks.kernels_bench",         # Pallas kernels
 ]
 
@@ -34,6 +35,7 @@ SMOKE_MODULES = [
     "benchmarks.sec5_whatif",
     "benchmarks.sweep_bench",
     "benchmarks.tpu_predict",
+    "benchmarks.trace_breakdown",
 ]
 
 

@@ -89,6 +89,7 @@ class HPLResult:
     gflops: float
     events: int
     comm_time_est: float = 0.0
+    trace: Optional[object] = None   # TraceRecorder when run with trace=True
 
 
 class HPLRank:
@@ -104,6 +105,8 @@ class HPLRank:
         sim = self.sim
         cfg = sim.cfg
         mpi = sim.mpi
+        eng = sim.engine
+        tr = eng.trace
         blas = sim.blas[self.rank]
         P, Q, nb, N = cfg.P, cfg.Q, cfg.nb, cfg.N
         col_group = [self.q * P + pp for pp in range(P)]
@@ -121,45 +124,82 @@ class HPLRank:
 
             if self.q == qk:
                 # --- 1. panel factorization --------------------------------
+                ph0 = eng.now
                 t = 0.0
                 for j in range(w):
                     t += blas.idamax(max(mloc - j, 1))
                     t += blas.dscal(max(mloc - j, 1))
                     t += blas.dger(max(mloc - j, 1), w - j - 1)
+                if tr.enabled:
+                    tr.compute(self.rank, "panel_blas", t,
+                               args={"panel": k, "w": w})
                 yield t
                 # pivot search allreduces: one aggregated column sync +
                 # w analytic small allreduces (latency-bound)
                 yield from mpi.barrier(self.rank, col_group, ("pf", k, self.q))
                 ar_lat = 2 * math.ceil(math.log2(max(P, 2))) \
                     * (sim.net.topo.base_latency + mpi.overhead)
+                if tr.enabled:
+                    tr.complete(self.rank, "comm", "pivot_allreduce",
+                                eng.now, t1=eng.now + w * ar_lat,
+                                args={"panel": k})
                 yield w * ar_lat
+                if tr.enabled:
+                    tr.complete(self.rank, "phase", "panel_fact", ph0,
+                                args={"panel": k})
                 # --- 2. broadcast along my row -----------------------------
                 if Q > 1:
+                    ph0 = eng.now
                     yield from self._bcast_panel(row_group, qk, panel_bytes, k)
+                    if tr.enabled:
+                        tr.complete(self.rank, "phase", "panel_bcast", ph0,
+                                    args={"panel": k})
             else:
                 if Q > 1:
+                    ph0 = eng.now
                     yield from self._bcast_panel(row_group, qk, panel_bytes, k)
+                    if tr.enabled:
+                        tr.complete(self.rank, "phase", "panel_bcast", ph0,
+                                    args={"panel": k})
 
             # --- 3. trailing row swaps (U strip) among column ranks --------
             u_bytes = 8.0 * w * max(nloc, 0)
             if P > 1 and u_bytes > 0:
+                ph0 = eng.now
                 rounds = math.ceil(math.log2(P))
                 peer_up = col_group[(self.p + 1) % P]
                 peer_dn = col_group[(self.p - 1) % P]
                 for r in range(rounds):
                     ev = mpi.isend(self.rank, peer_up,
                                    u_bytes / max(rounds, 1),
-                                   tag=(k * 7 + r) % 65536)
+                                   tag=("swap", k, r))
                     yield from mpi.recv(peer_dn, self.rank,
-                                        tag=(k * 7 + r) % 65536)
+                                        tag=("swap", k, r))
                     yield ev
-                yield blas.dlaswp(w, max(nloc, 1))
+                t = blas.dlaswp(w, max(nloc, 1))
+                if tr.enabled:
+                    tr.compute(self.rank, "dlaswp", t, args={"panel": k})
+                yield t
+                if tr.enabled:
+                    tr.complete(self.rank, "phase", "row_swap", ph0,
+                                args={"panel": k})
 
             # --- 4. trailing update ---------------------------------------
             if nloc > 0:
-                yield blas.dtrsm(w, nloc)
+                ph0 = eng.now
+                t = blas.dtrsm(w, nloc)
+                if tr.enabled:
+                    tr.compute(self.rank, "dtrsm", t, args={"panel": k})
+                yield t
                 if mloc > 0:
-                    yield blas.dgemm(mloc, nloc, w)
+                    t = blas.dgemm(mloc, nloc, w)
+                    if tr.enabled:
+                        tr.compute(self.rank, "dgemm", t,
+                                   args={"panel": k, "m": mloc, "n": nloc})
+                    yield t
+                if tr.enabled:
+                    tr.complete(self.rank, "phase", "trailing_update", ph0,
+                                args={"panel": k})
 
         sim.finish_times[self.rank] = sim.engine.now
 
@@ -177,10 +217,10 @@ class HPLRank:
         my_i = (self.q - root_q) % Q
         if my_i > 0:
             prev_rank = row_group[(self.q - 1) % Q]
-            yield from mpi.recv(prev_rank, self.rank, tag=(k * 3 + 1) % 65536)
+            yield from mpi.recv(prev_rank, self.rank, tag=("bc1r", k))
         if my_i < Q - 1:
             nxt = row_group[(self.q + 1) % Q]
-            ev = mpi.isend(self.rank, nxt, nbytes, tag=(k * 3 + 1) % 65536)
+            ev = mpi.isend(self.rank, nxt, nbytes, tag=("bc1r", k))
             if cfg.lookahead == 0:
                 yield ev
 
@@ -191,12 +231,20 @@ class HPLSim:
     ``HPLSim(cfg, platform)`` builds the hardware pair from a
     ``repro.platforms.Platform`` spec (node model, topology, ranks per
     node, and MPI-stack knobs all come from the spec); the explicit
-    ``HPLSim(cfg, node, topology)`` form stays for ad-hoc hardware.
+    ``HPLSim(cfg, node, topology)`` form stays for ad-hoc hardware, and
+    ``HPLSim(cfg, platform.des(trace=True))`` accepts a prebuilt stack.
+
+    ``trace=True`` attaches a ``repro.trace.TraceRecorder``: per-rank
+    phase/compute/comm timelines, Chrome-trace export
+    (``result.trace.to_chrome_json(path)``) and critical-path analysis
+    (``result.trace.summary()``) at zero cost — and zero perturbation —
+    when off.
     """
 
     def __init__(self, cfg: HPLConfig, node, topology=None,
                  ranks_per_node: Optional[int] = None,
-                 mpi_overhead: Optional[float] = None):
+                 mpi_overhead: Optional[float] = None,
+                 trace: Optional[bool] = None):
         if topology is None and hasattr(node, "des"):   # a Platform spec
             platform = node
             stack = platform.des()
@@ -205,18 +253,30 @@ class HPLSim:
                 ranks_per_node = stack.ranks_per_node
             if mpi_overhead is None:
                 mpi_overhead = stack.mpi_overhead
+            if trace is None:
+                trace = stack.trace
             capacity = platform.scale.n_ranks
             if cfg.n_ranks > capacity:
                 raise ValueError(
                     f"config needs {cfg.n_ranks} ranks but platform "
                     f"{platform.name!r} has {capacity}")
+        elif topology is None and hasattr(node, "topology"):  # a DESStack
+            stack = node
+            node, topology = stack.node, stack.topology
+            if ranks_per_node is None:
+                ranks_per_node = stack.ranks_per_node
+            if mpi_overhead is None:
+                mpi_overhead = stack.mpi_overhead
+            if trace is None:
+                trace = stack.trace
         elif topology is None:
-            raise TypeError("HPLSim needs a Platform or (node, topology)")
+            raise TypeError("HPLSim needs a Platform, a DESStack, or "
+                            "(node, topology)")
         ranks_per_node = 1 if ranks_per_node is None else ranks_per_node
         mpi_overhead = 5e-7 if mpi_overhead is None else mpi_overhead
         self.cfg = cfg
         self.node = node
-        self.engine = Engine()
+        self.engine = Engine(trace=bool(trace))
         self.net = Network(self.engine, topology)
         self.mpi = SimMPI(self.engine, self.net, cfg.n_ranks,
                           rank_to_node=lambda r: r // ranks_per_node,
@@ -229,10 +289,17 @@ class HPLSim:
         self.blas = [SimBLAS(share) for _ in range(cfg.n_ranks)]
         self.finish_times: Dict[int, float] = {}
 
+    @property
+    def trace(self):
+        """The engine's TraceRecorder (NULL_RECORDER when tracing off)."""
+        return self.engine.trace
+
     def run(self) -> HPLResult:
         for r in range(self.cfg.n_ranks):
             self.engine.spawn(HPLRank(self, r).run(), name=f"rank{r}")
         self.engine.run_all()
         t = max(self.finish_times.values())
         return HPLResult(time_s=t, gflops=self.cfg.flops() / t / 1e9,
-                         events=self.engine.event_count)
+                         events=self.engine.event_count,
+                         trace=self.engine.trace
+                         if self.engine.trace.enabled else None)

@@ -74,13 +74,14 @@ class TransformerStepSim:
                  mesh: Tuple[int, int] = (16, 16), pods: int = 1,
                  chip: NodeModel = TPU_V5E, ici: ICIParams = ICI,
                  straggler: Optional[Tuple[int, float]] = None,
-                 jitter: float = 0.0, seed: int = 0):
+                 jitter: float = 0.0, seed: int = 0,
+                 trace: bool = False):
         self.workload = workload
         self.mesh = mesh
         self.pods = pods
         self.n_per_pod = mesh[0] * mesh[1]
         self.n = self.n_per_pod * pods
-        self.engine = Engine()
+        self.engine = Engine(trace=trace)
         if pods == 1:
             topo = Torus(mesh, link_bw=ici.link_bw)
         else:
@@ -119,10 +120,14 @@ class TransformerStepSim:
         return s
 
     def _rank_proc(self, rank: int):
-        mpi = self.mpi
+        tr = self.engine.trace
         groups = self._groups(rank)
         scale = self._compute_scale(rank)
         for li, layer in enumerate(self.workload.layers):
+            ph0 = self.engine.now
+            if tr.enabled:
+                tr.compute(rank, "layer_compute", layer.compute_s * scale,
+                           args={"layer": li})
             yield layer.compute_s * scale
             for ci, (op, wire, axis) in enumerate(layer.collectives):
                 grp = groups[axis]
@@ -130,7 +135,14 @@ class TransformerStepSim:
                     continue
                 yield from self._collective(rank, op, wire, grp,
                                             op_id=("l", li, ci, axis))
+            if tr.enabled:
+                tr.complete(rank, "phase", f"layer{li}", ph0,
+                            args={"layer": li})
+        ph0 = self.engine.now
         if self.workload.tail_compute_s:
+            if tr.enabled:
+                tr.compute(rank, "tail_compute",
+                           self.workload.tail_compute_s * scale)
             yield self.workload.tail_compute_s * scale
         for ci, (op, wire, axis) in enumerate(self.workload.tail_collectives):
             grp = groups[axis]
@@ -141,12 +153,17 @@ class TransformerStepSim:
                 pg = groups["pod"]
                 yield from self._collective(rank, op, wire / len(grp), pg,
                                             op_id=("tp", ci))
+        if tr.enabled and self.engine.now > ph0:
+            tr.complete(rank, "phase", "tail", ph0)
         self.finish[rank] = self.engine.now
 
     def _collective(self, rank, op, wire_bytes, group, op_id):
         """Ring collectives as real flows; wire_bytes already follows the
         hlo_parse ring convention (bytes through one device)."""
         mpi = self.mpi
+        tr = self.engine.trace
+        tok = tr.coll_begin(rank, op, op_id, group, wire_bytes) \
+            if tr.enabled else None
         n = len(group)
         rounds = {"all-reduce": 2 * (n - 1), "all-gather": n - 1,
                   "reduce-scatter": n - 1, "all-to-all": n - 1,
@@ -156,12 +173,16 @@ class TransformerStepSim:
         me = idx[rank]
         nxt, prv = group[(me + 1) % n], group[(me - 1) % n]
         for k in range(rounds):
-            ev = mpi.isend(rank, nxt, per_round,
-                           tag=hash((op_id, k, me)) & 0x7fffffff)
-            yield from mpi.recv(prv, rank,
-                                tag=hash((op_id, k, (me - 1) % n))
-                                & 0x7fffffff)
+            ev = mpi.isend(rank, nxt, per_round, tag=(op_id, k, me))
+            yield from mpi.recv(prv, rank, tag=(op_id, k, (me - 1) % n))
             yield ev
+        if tok is not None:
+            tr.coll_end(rank, tok)
+
+    @property
+    def trace(self):
+        """The engine's TraceRecorder (NULL_RECORDER when tracing off)."""
+        return self.engine.trace
 
     def run(self) -> Dict:
         for r in range(self.n):

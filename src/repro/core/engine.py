@@ -18,6 +18,8 @@ import heapq
 import math
 from typing import Any, Callable, Generator, List, Optional
 
+from repro.trace.recorder import NULL_RECORDER, TraceRecorder
+
 
 class Event:
     __slots__ = ("engine", "_set", "waiters", "payload")
@@ -82,11 +84,26 @@ class Process:
 
 
 class Engine:
-    def __init__(self):
+    """Event loop.  Heap entries are ``(time, seq, fn, arg)``: ``seq`` is
+    a monotonically increasing insertion number, so same-timestamp ties
+    always fire in schedule order — event ordering (and therefore traces
+    and results) is reproducible run-to-run.  Anything feeding the heap
+    must iterate its own state deterministically too (see the ordered
+    flow dicts in hardware/network.py).
+
+    ``trace=True`` attaches a ``repro.trace.TraceRecorder``; off, the
+    no-op NULL_RECORDER singleton sits there so instrumentation sites
+    cost one attribute test and the loop itself is untouched.  The
+    recorder never schedules events, so traced and untraced runs of the
+    same scenario produce bit-identical simulated times.
+    """
+
+    def __init__(self, trace: bool = False):
         self.now = 0.0
         self._heap: list = []
         self._seq = 0
         self.event_count = 0
+        self.trace = TraceRecorder(self) if trace else NULL_RECORDER
 
     def event(self) -> Event:
         return Event(self)

@@ -29,7 +29,11 @@ class Link:
     def __init__(self, capacity: float, latency: float = 0.0, name: str = ""):
         self.capacity = capacity      # bytes / s
         self.latency = latency        # s per traversal
-        self.flows: set = set()
+        # flow -> None: an *ordered* set.  Iteration order must be
+        # insertion order, not id() order — component traversal feeds the
+        # engine heap, and id()-ordered sets made same-timestamp event
+        # ordering (and traces) vary run-to-run.
+        self.flows: Dict["Flow", None] = {}
         self.name = name
 
 
@@ -54,7 +58,7 @@ class Network:
                  min_flow_time: float = 0.0):
         self.engine = engine
         self.topo = topology
-        self.flows: set = set()
+        self.flows: Dict[Flow, None] = {}   # ordered set (see Link.flows)
         self.min_flow_time = min_flow_time
 
     # -- fluid max-min fairness ------------------------------------------
@@ -145,10 +149,10 @@ class Network:
         f._last_t = now
         if f.remaining > 1e-9 * max(f.size, 1.0):
             return  # superseded; a newer prediction exists
-        self.flows.discard(f)
+        self.flows.pop(f, None)
         neighbors = [g for l in f.links for g in l.flows if g is not f]
         for l in f.links:
-            l.flows.discard(f)
+            l.flows.pop(f, None)
         if neighbors:
             self._reallocate(neighbors)
         f.done.set()
@@ -168,9 +172,9 @@ class Network:
 
         def start(_):
             f._last_t = self.engine.now
-            self.flows.add(f)
+            self.flows[f] = None
             for l in f.links:
-                l.flows.add(f)
+                l.flows[f] = None
             self._reallocate([f])
         self.engine.call_at(self.engine.now + latency, start, None)
         return done

@@ -44,10 +44,27 @@ class NodeModel:
 # --- registry-backed shims ---------------------------------------------------
 # (Xeon-style peak derivation lives in platforms.spec.NodeSpec.xeon.)
 
+def node_from_spec(spec) -> NodeModel:
+    """NodeSpec -> NodeModel (platforms.build.build_node delegates here;
+    living on this side of the package boundary keeps the spec->model
+    mapping importable from either direction without a cycle)."""
+    return NodeModel(name=spec.name, peak_flops=spec.peak_flops,
+                     mem_bw=spec.mem_bw, cores=spec.cores,
+                     gemm_efficiency=spec.gemm_efficiency,
+                     mem_efficiency=spec.mem_efficiency,
+                     blas_latency=spec.blas_latency,
+                     accel_peak_flops=spec.accel_peak_flops,
+                     accel_mem_bw=spec.accel_mem_bw,
+                     accel_efficiency=spec.accel_efficiency)
+
+
 def _registry_node(platform_name: str) -> NodeModel:
-    from repro.platforms.build import build_node
+    # registry/spec only import platforms internals, so this stays safe
+    # whichever of repro.core / repro.platforms gets imported first
+    # (going through platforms.build here re-entered a half-initialized
+    # module when repro.platforms was imported before repro.core).
     from repro.platforms.registry import get_platform
-    return build_node(get_platform(platform_name).node)
+    return node_from_spec(get_platform(platform_name).node)
 
 
 def local_node() -> NodeModel:

@@ -8,6 +8,19 @@ same size-based switch points.
 
 Every rank is a DES virtual thread; ``yield from`` any op to advance
 simulated time.
+
+Message matching is exact: tags are arbitrary hashable values and the
+collectives use structured ``(op_id, round, ...)`` tuples directly.  (An
+earlier revision truncated tags to 16-bit hashes, which could cross-match
+two overlapping collectives on the same group — op_id hygiene is now a
+tested invariant, see tests/test_simmpi.py.)
+
+Tracing: when ``engine.trace`` is enabled every collective emits one span
+per member rank (tagged with group size / bytes / algorithm op key),
+every p2p message an async record from isend-post to recv-completion,
+and blocking recvs a span carrying the send->recv happens-before edge.
+The recorder never schedules engine events, so tracing does not perturb
+simulated time.
 """
 from __future__ import annotations
 
@@ -29,13 +42,13 @@ class SimMPI:
         self.n = n_ranks
         self.rank_to_node = rank_to_node or (lambda r: r)
         self.overhead = overhead         # per-call software overhead (s)
-        self._posted: Dict[Tuple[int, int, int], List[Event]] = {}
-        self._recv_wait: Dict[Tuple[int, int, int], List[Event]] = {}
+        self._posted: Dict[Tuple[int, int, object], List[Event]] = {}
+        self._recv_wait: Dict[Tuple[int, int, object], List[Event]] = {}
         self._coll_state: Dict = {}
         self.counters = {"p2p_msgs": 0, "p2p_bytes": 0.0, "colls": 0}
 
     # ---------------------------------------------------------------- p2p
-    def isend(self, src: int, dst: int, nbytes: float, tag: int = 0) -> Event:
+    def isend(self, src: int, dst: int, nbytes: float, tag=0) -> Event:
         """Post a send.  Returns the *sender-side* completion event:
         eager messages complete for the sender once buffered (overhead);
         rendezvous messages complete when the transfer finishes.  The
@@ -48,6 +61,8 @@ class SimMPI:
         if src == dst:
             eng.call_at(eng.now + self.overhead,
                         lambda _: transfer_done.set(), None)
+            if eng.trace.enabled:
+                eng.trace.msg_post(src, dst, nbytes, tag, transfer_done)
             return transfer_done
         lat_extra = 0.0 if eager \
             else RDV_HANDSHAKE * self.net.topo.base_latency
@@ -57,6 +72,8 @@ class SimMPI:
                                       self.rank_to_node(dst), nbytes)
             flow_done.waiters.append(_Relay(transfer_done))
         eng.call_at(eng.now + self.overhead + lat_extra, go, None)
+        if eng.trace.enabled:
+            eng.trace.msg_post(src, dst, nbytes, tag, transfer_done)
 
         key = (src, dst, tag)
         waiters = self._recv_wait.get(key)
@@ -71,14 +88,16 @@ class SimMPI:
             return send_done
         return transfer_done
 
-    def send(self, src: int, dst: int, nbytes: float, tag: int = 0):
+    def send(self, src: int, dst: int, nbytes: float, tag=0):
         """Generator: blocking send."""
         ev = self.isend(src, dst, nbytes, tag)
         yield ev
 
-    def recv(self, src: int, dst: int, tag: int = 0):
+    def recv(self, src: int, dst: int, tag=0):
         """Generator: blocking receive — waits for the matching send's
         transfer to complete."""
+        tr = self.engine.trace
+        t0 = self.engine.now if tr.enabled else 0.0
         key = (src, dst, tag)
         box = self._posted.get(key)
         if box:
@@ -88,15 +107,30 @@ class SimMPI:
             self._recv_wait.setdefault(key, []).append(w)
             transfer = yield w
         yield transfer
+        if tr.enabled:
+            tr.recv_done(dst, src, t0, transfer)
 
-    def sendrecv(self, me: int, peer: int, nbytes: float, tag: int = 0):
+    def sendrecv(self, me: int, peer: int, nbytes: float, tag=0):
         ev = self.isend(me, peer, nbytes, tag)
         yield from self.recv(peer, me, tag)
         yield ev
 
     # --------------------------------------------------------- collectives
     # One generator per participating rank; all ranks call with the same
-    # group and op_id (unique per call site x step).
+    # group and op_id (unique per call site x step — exact tuple tags mean
+    # two in-flight collectives with different op_ids can never
+    # cross-match).
+    def _traced(self, name: str, rank: int, group: List[int], nbytes: float,
+                op_id, impl):
+        """Wrap a collective generator in a per-rank trace span."""
+        tr = self.engine.trace
+        if not tr.enabled:
+            yield from impl
+            return
+        tok = tr.coll_begin(rank, name, op_id, group, nbytes)
+        yield from impl
+        tr.coll_end(rank, tok)
+
     def _gather_barrier(self, op_id, group: List[int], rank: int):
         """All ranks of `group` rendezvous; returns (event, is_root)."""
         st = self._coll_state.setdefault(op_id, {"arrived": 0,
@@ -108,6 +142,10 @@ class SimMPI:
         return st["ev"]
 
     def barrier(self, rank: int, group: List[int], op_id):
+        return self._traced("barrier", rank, group, 0.0, op_id,
+                            self._barrier_impl(rank, group, op_id))
+
+    def _barrier_impl(self, rank: int, group: List[int], op_id):
         ev = self._gather_barrier(op_id, group, rank)
         yield ev
         # dissemination rounds: ceil(log2 n) latency exchanges
@@ -117,6 +155,12 @@ class SimMPI:
 
     def bcast(self, rank: int, root: int, group: List[int], nbytes: float,
               op_id):
+        return self._traced("bcast", rank, group, nbytes, op_id,
+                            self._bcast_impl(rank, root, group, nbytes,
+                                             op_id))
+
+    def _bcast_impl(self, rank: int, root: int, group: List[int],
+                    nbytes: float, op_id):
         """Binomial tree for small msgs; scatter+ring-allgather for large
         (OpenMPI/van-de-Geijn switch at 512 KiB)."""
         self.counters["colls"] += 1
@@ -143,17 +187,22 @@ class SimMPI:
         if recv_round is not None:
             src_v = me - (1 << recv_round)
             src = group[(src_v + idx[root]) % n]
-            yield from self.recv(src, rank, tag=hash((op_id, me)) & 0xffff)
+            yield from self.recv(src, rank, tag=(op_id, me))
         start = 0 if me == 0 else recv_round + 1
         for k in range(start, rounds):
             dst_v = me + (1 << k)
             if dst_v < n:
                 dst = group[(dst_v + idx[root]) % n]
-                ev = self.isend(rank, dst, nbytes,
-                                tag=hash((op_id, dst_v)) & 0xffff)
+                ev = self.isend(rank, dst, nbytes, tag=(op_id, dst_v))
                 yield ev
 
     def allreduce(self, rank: int, group: List[int], nbytes: float, op_id):
+        return self._traced("allreduce", rank, group, nbytes, op_id,
+                            self._allreduce_impl(rank, group, nbytes,
+                                                 op_id))
+
+    def _allreduce_impl(self, rank: int, group: List[int], nbytes: float,
+                        op_id):
         """Recursive doubling (small) / Rabenseifner reduce-scatter+allgather
         (large, switch 64 KiB)."""
         self.counters["colls"] += 1
@@ -169,13 +218,19 @@ class SimMPI:
                 if peer_v < n:
                     peer = group[peer_v]
                     yield from self.sendrecv(rank, peer, nbytes,
-                                             tag=hash((op_id, k)) & 0xffff)
+                                             tag=(op_id, k))
         else:
             yield from self.reduce_scatter(rank, group, nbytes, (op_id, "rs"))
             yield from self.allgather(rank, group, nbytes / n, (op_id, "ag"))
 
     def reduce_scatter(self, rank: int, group: List[int], nbytes: float,
                        op_id):
+        return self._traced("reduce_scatter", rank, group, nbytes, op_id,
+                            self._reduce_scatter_impl(rank, group, nbytes,
+                                                      op_id))
+
+    def _reduce_scatter_impl(self, rank: int, group: List[int],
+                             nbytes: float, op_id):
         """Ring reduce-scatter: n-1 rounds of nbytes/n to the neighbor."""
         n = len(group)
         if n <= 1:
@@ -184,14 +239,18 @@ class SimMPI:
         me = idx[rank]
         nxt, prv = group[(me + 1) % n], group[(me - 1) % n]
         for k in range(n - 1):
-            ev = self.isend(rank, nxt, nbytes / n,
-                            tag=hash((op_id, k, me)) & 0xffff)
-            yield from self.recv(prv, rank,
-                                 tag=hash((op_id, k, (me - 1) % n)) & 0xffff)
+            ev = self.isend(rank, nxt, nbytes / n, tag=(op_id, k, me))
+            yield from self.recv(prv, rank, tag=(op_id, k, (me - 1) % n))
             yield ev
 
     def allgather(self, rank: int, group: List[int], nbytes_shard: float,
                   op_id):
+        return self._traced("allgather", rank, group, nbytes_shard, op_id,
+                            self._allgather_impl(rank, group, nbytes_shard,
+                                                 op_id))
+
+    def _allgather_impl(self, rank: int, group: List[int],
+                        nbytes_shard: float, op_id):
         """Ring allgather: n-1 rounds forwarding shards."""
         n = len(group)
         if n <= 1:
@@ -200,14 +259,18 @@ class SimMPI:
         me = idx[rank]
         nxt, prv = group[(me + 1) % n], group[(me - 1) % n]
         for k in range(n - 1):
-            ev = self.isend(rank, nxt, nbytes_shard,
-                            tag=hash((op_id, k, me)) & 0xffff)
-            yield from self.recv(prv, rank,
-                                 tag=hash((op_id, k, (me - 1) % n)) & 0xffff)
+            ev = self.isend(rank, nxt, nbytes_shard, tag=(op_id, k, me))
+            yield from self.recv(prv, rank, tag=(op_id, k, (me - 1) % n))
             yield ev
 
     def alltoall(self, rank: int, group: List[int], nbytes_per_pair: float,
                  op_id):
+        return self._traced("alltoall", rank, group, nbytes_per_pair, op_id,
+                            self._alltoall_impl(rank, group,
+                                                nbytes_per_pair, op_id))
+
+    def _alltoall_impl(self, rank: int, group: List[int],
+                       nbytes_per_pair: float, op_id):
         """Pairwise exchange, n-1 rounds: in round k send to (me+k) mod n
         and receive from (me-k) mod n, which covers every ordered pair for
         any group size (an XOR pairing silently skips rounds whenever
@@ -219,9 +282,8 @@ class SimMPI:
         for k in range(1, n):
             dst = group[(me + k) % n]
             src = group[(me - k) % n]
-            ev = self.isend(rank, dst, nbytes_per_pair,
-                            tag=hash((op_id, k)) & 0xffff)
-            yield from self.recv(src, rank, tag=hash((op_id, k)) & 0xffff)
+            ev = self.isend(rank, dst, nbytes_per_pair, tag=(op_id, k))
+            yield from self.recv(src, rank, tag=(op_id, k))
             yield ev
 
 

@@ -21,11 +21,13 @@ from .spec import FabricSpec, NodeSpec, Platform
 
 @dataclasses.dataclass(frozen=True)
 class DESStack:
-    """Everything HPLSim needs: the hardware pair plus MPI-stack knobs."""
+    """Everything HPLSim needs: the hardware pair plus MPI-stack knobs.
+    ``trace`` asks the consuming sim to attach a TraceRecorder."""
     node: NodeModel
     topology: Topology
     ranks_per_node: int = 1
     mpi_overhead: float = 5e-7
+    trace: bool = False
 
     def __iter__(self):
         return iter((self.node, self.topology, self.ranks_per_node,
@@ -33,14 +35,8 @@ class DESStack:
 
 
 def build_node(spec: NodeSpec) -> NodeModel:
-    return NodeModel(name=spec.name, peak_flops=spec.peak_flops,
-                     mem_bw=spec.mem_bw, cores=spec.cores,
-                     gemm_efficiency=spec.gemm_efficiency,
-                     mem_efficiency=spec.mem_efficiency,
-                     blas_latency=spec.blas_latency,
-                     accel_peak_flops=spec.accel_peak_flops,
-                     accel_mem_bw=spec.accel_mem_bw,
-                     accel_efficiency=spec.accel_efficiency)
+    from repro.core.hardware.node import node_from_spec
+    return node_from_spec(spec)
 
 
 def build_topology(fab: FabricSpec, n_nodes: int) -> Topology:
@@ -86,12 +82,13 @@ def build_topology(fab: FabricSpec, n_nodes: int) -> Topology:
     raise ValueError(f"unknown fabric kind {fab.kind!r}")
 
 
-def build_des(platform: Platform) -> DESStack:
+def build_des(platform: Platform, *, trace: bool = False) -> DESStack:
     return DESStack(node=build_node(platform.node),
                     topology=build_topology(platform.fabric,
                                             platform.scale.n_nodes),
                     ranks_per_node=platform.scale.ranks_per_node,
-                    mpi_overhead=platform.mpi.overhead)
+                    mpi_overhead=platform.mpi.overhead,
+                    trace=trace)
 
 
 def derived_net_latency(platform: Platform) -> float:

@@ -136,11 +136,12 @@ class Platform:
     notes: str = ""
 
     # ------------------------------------------------------ backends
-    def des(self):
+    def des(self, trace: bool = False):
         """Build the discrete-event stack: a DESStack of
-        (node, topology, ranks_per_node, mpi_overhead)."""
+        (node, topology, ranks_per_node, mpi_overhead).  ``trace=True``
+        marks the stack so HPLSim attaches a TraceRecorder."""
         from .build import build_des
-        return build_des(self)
+        return build_des(self, trace=trace)
 
     def fastsim(self, *, calibrated: bool = True):
         """Build FastSimParams (with ``calibration`` overrides applied

@@ -13,6 +13,13 @@ params: ``PredictRequest(rid=1, platform="frontera")`` serves that
 machine's published HPL run from its spec (DES-calibrated fastsim
 params included), so the endpoint can predict any registry machine by
 name.
+
+``PredictRequest(..., breakdown=True)`` additionally runs a traced DES
+of the same scenario and attaches ``result["breakdown"]`` — per-phase
+times, compute/comm/idle fractions and the critical path (see
+``repro.trace``).  The DES costs real wall time per rank, so breakdown
+requests are capped at ``max_des_ranks`` (reject, don't stall, the
+batch endpoint).
 """
 from __future__ import annotations
 
@@ -29,20 +36,21 @@ class PredictRequest:
     cfg: Optional[HPLConfig] = None
     params: Optional[FastSimParams] = None
     platform: Optional[str] = None       # registry name; fills cfg/params
+    breakdown: bool = False              # attach a DES phase breakdown
     result: Optional[dict] = None
 
 
 class HPLPredictionService:
     """Micro-batching front end over the batched sweep engine."""
 
-    def __init__(self, max_batch: int = 256):
+    def __init__(self, max_batch: int = 256, max_des_ranks: int = 256):
         self.max_batch = max_batch
+        self.max_des_ranks = max_des_ranks
         self._queue: List[PredictRequest] = []
         self.stats = {"requests": 0, "batches": 0, "scenarios": 0,
-                      "traces": 0}
+                      "traces": 0, "des_breakdowns": 0}
 
-    @staticmethod
-    def _resolve(req: PredictRequest) -> None:
+    def _resolve(self, req: PredictRequest) -> None:
         if req.params is None or req.cfg is None:
             if req.platform is None:
                 raise ValueError(
@@ -54,11 +62,32 @@ class HPLPredictionService:
                 req.params = plat.fastsim()
             if req.cfg is None:
                 req.cfg = plat.hpl_config()
+        if req.breakdown:
+            if req.platform is None:
+                raise ValueError(
+                    f"request {req.rid}: breakdown=True needs a platform "
+                    "name (the DES is built from the spec)")
+            if req.cfg.n_ranks > self.max_des_ranks:
+                raise ValueError(
+                    f"request {req.rid}: breakdown DES at "
+                    f"{req.cfg.n_ranks} ranks exceeds max_des_ranks="
+                    f"{self.max_des_ranks}; pass a scaled-down cfg")
 
     def submit(self, req: PredictRequest) -> None:
         self._resolve(req)
         self.stats["requests"] += 1
         self._queue.append(req)
+
+    def _des_breakdown(self, req: PredictRequest) -> dict:
+        """Traced DES of the request scenario -> phase/category report."""
+        from repro.core.apps.hpl import HPLSim
+        from repro.platforms import get_platform
+        res = HPLSim(req.cfg, get_platform(req.platform), trace=True).run()
+        out = res.trace.summary()
+        out["des_time_s"] = res.time_s
+        out["des_gflops"] = res.gflops
+        self.stats["des_breakdowns"] += 1
+        return out
 
     def flush(self) -> Dict[int, dict]:
         """Drain the queue in waves of up to ``max_batch`` scenarios.
@@ -75,6 +104,9 @@ class HPLPredictionService:
             res = sweep_hpl([r.cfg for r in wave],
                             [r.params for r in wave])
             for req, out in zip(wave, res):
+                if req.breakdown:
+                    out = dict(out)
+                    out["breakdown"] = self._des_breakdown(req)
                 req.result = out
                 results[req.rid] = out
             self.stats["batches"] += 1

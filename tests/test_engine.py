@@ -76,6 +76,40 @@ def test_network_fair_sharing_two_flows():
     assert abs(eng.now - 2.0) < 1e-3
 
 
+def test_deterministic_event_ordering_under_contention():
+    """Regression: heap ties break by insertion seq and flow sets iterate
+    in insertion order (they were id()-ordered Python sets, which made
+    same-timestamp completions — and traces — vary run-to-run).  Two
+    fresh identical contended runs must log identical sequences."""
+    def run_once():
+        eng = Engine()
+
+        class T:
+            base_latency = 0.0
+            shared = Link(1e9)
+            def route(self, s, d):
+                return [self.shared]
+        net = Network(eng, T())
+        log = []
+        # 8 equal flows: all complete at the same instant -> pure tie
+        for i in range(8):
+            ev = net.send(i, 100 + i, 1e8)
+
+            def watch(name, ev=ev):
+                yield ev
+                log.append((name, eng.now))
+            eng.spawn(watch(i))
+        eng.run_all()
+        return log, eng.now
+
+    log_a, t_a = run_once()
+    log_b, t_b = run_once()
+    assert t_a == t_b
+    assert log_a == log_b                       # same order, same times
+    assert sorted(n for n, _ in log_a) == list(range(8))
+    assert all(t == t_a for _, t in log_a)      # genuinely tied
+
+
 def test_network_components_are_independent():
     eng = Engine()
 

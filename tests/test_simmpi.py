@@ -102,6 +102,68 @@ def test_alltoall_completes():
     assert len(done) == 8
 
 
+def test_overlapping_tags_never_crossmatch():
+    """Op-id hygiene: tags are matched exactly (structured tuples), so a
+    posted recv for one collective can never swallow another collective's
+    in-flight message on the same (src, dst) pair.  (The old 16-bit
+    ``hash(op_id) & 0xffff`` truncation could collide two op_ids.)"""
+    eng, mpi = _setup(2)
+    size = 10 * EAGER_LIMIT            # rendezvous: transfer takes a while
+    t = {}
+
+    def sender():
+        yield from mpi.send(0, 1, size, tag=("collA", 1))
+        t["send_a"] = eng.now
+        yield 5e-3                     # B posted long after A's transfer
+        yield from mpi.send(0, 1, 1024, tag=("collB", 1))
+
+    def receiver():
+        # recv for B is posted FIRST; only exact-tag matching keeps it
+        # from grabbing A's transfer
+        yield from mpi.recv(0, 1, tag=("collB", 1))
+        t["recv_b"] = eng.now
+        yield from mpi.recv(0, 1, tag=("collA", 1))
+        t["recv_a"] = eng.now
+    eng.spawn(sender())
+    eng.spawn(receiver())
+    eng.run_all()
+    # a cross-match would complete recv_b at A's transfer time; instead
+    # it waited out the sender's 5 ms pause for the real B message
+    assert t["recv_b"] >= t["send_a"] + 5e-3
+    # A's message was sitting buffered the whole time: consumed instantly
+    assert t["recv_a"] == t["recv_b"]
+
+
+def test_interleaved_collectives_same_group_correct_timing():
+    """Two collectives on one group, issued back-to-back with distinct
+    op_ids and skewed entry times: both must complete, with per-rank op
+    ordering intact (op 'a' done before op 'b' starts on every rank) and
+    message accounting consistent."""
+    n = 4
+    eng, mpi = _setup(n)
+    group = list(range(n))
+    marks = {}
+
+    def rank(r):
+        if r == 0:
+            yield 2e-3                 # rank 0 arrives late to op 'a'
+        yield from mpi.allreduce(r, group, 1 << 10, op_id=("a",))
+        t_a = eng.now
+        yield from mpi.allreduce(r, group, 1 << 18, op_id=("b",))
+        marks[r] = (t_a, eng.now)
+    for r in range(n):
+        eng.spawn(rank(r))
+    eng.run_all()
+    assert len(marks) == n
+    for r, (t_a, t_b) in marks.items():
+        assert t_a >= 2e-3             # nobody finished 'a' before rank 0 fed it
+        assert t_b > t_a, r
+    # small allreduce: recursive doubling = log2(n) sendrecvs per rank;
+    # large: Rabenseifner ring rs+ag = 2*(n-1) msgs per rank
+    assert mpi.counters["p2p_msgs"] == n * math.log2(n) + n * 2 * (n - 1)
+    assert mpi.counters["colls"] == 2 * n
+
+
 @pytest.mark.parametrize("n", [3, 5, 6, 7])
 def test_alltoall_nonpow2_exchanges_every_pair(n):
     """(me+k)%n pairing: every rank sends to all n-1 peers even when the

@@ -1,0 +1,59 @@
+"""Hypothesis property tests for trace invariants (satellite of the
+trace subsystem): across random HPL geometries and serial chains,
+(a) critical-path length <= makespan, and == makespan for a serial
+chain, (b) per-rank compute+comm+idle sums to the makespan, (c) the
+Chrome export is valid trace-event JSON."""
+import json
+
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.apps.hpl import HPLConfig, HPLSim
+from repro.core.engine import Engine
+from repro.core.hardware.node import local_node
+from repro.core.hardware.topology import FatTreeTwoLevel
+from repro.trace import critical_path, rank_breakdown, validate_chrome_events
+
+REL = 1e-9
+TRACE_SETTINGS = settings(max_examples=12, deadline=None)
+
+
+@TRACE_SETTINGS
+@given(nb=st.integers(16, 96), P=st.integers(1, 3), Q=st.integers(1, 3),
+       panels=st.integers(2, 5), bcast=st.sampled_from(["1ring", "long"]))
+def test_trace_invariants_random_hpl(nb, P, Q, panels, bcast):
+    N = nb * panels - nb // 2           # exercise the partial last panel
+    node = local_node()
+    topo = FatTreeTwoLevel(max(P * Q, 16), 4, 2, link_bw=100e9 / 8)
+    cfg = HPLConfig(N=N, nb=nb, P=P, Q=Q, bcast=bcast)
+    sim = HPLSim(cfg, node, topo, trace=True)
+    res = sim.run()
+    tr = sim.trace
+    cp = critical_path(tr)
+    assert cp.length_s <= res.time_s * (1 + REL)
+    for r, acc in rank_breakdown(tr).items():
+        assert acc["idle"] >= -REL * res.time_s, (r, acc)
+        total = acc["compute"] + acc["comm"] + acc["idle"]
+        assert total == pytest.approx(res.time_s, rel=REL)
+    doc = tr.to_chrome_json()
+    validate_chrome_events(doc)
+    json.dumps(doc)                      # JSON-serializable end to end
+
+
+@TRACE_SETTINGS
+@given(waits=st.lists(st.floats(1e-6, 1.0), min_size=1, max_size=12))
+def test_serial_chain_critical_path_property(waits):
+    eng = Engine(trace=True)
+
+    def proc():
+        for i, w in enumerate(waits):
+            eng.trace.compute(0, f"s{i}", w)
+            yield w
+    eng.spawn(proc())
+    makespan = eng.run_all()
+    cp = critical_path(eng.trace)
+    assert cp.length_s == pytest.approx(makespan, rel=1e-9)
