@@ -29,7 +29,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Dict, List, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -372,7 +372,8 @@ Configs = Union[HPLConfig, Sequence[HPLConfig]]
 Params = Union[FastSimParams, Sequence[FastSimParams]]
 
 
-def sweep_hpl(configs: Configs, params: Params) -> List[dict]:
+def sweep_hpl(configs: Configs, params: Params, *,
+              bucket: Optional[Tuple[int, int, int]] = None) -> List[dict]:
     """Run a scenario sweep in as few compiled programs as possible.
 
     ``configs`` and ``params`` are zipped; a single ``HPLConfig`` or
@@ -384,6 +385,12 @@ def sweep_hpl(configs: Configs, params: Params) -> List[dict]:
     Batches are padded to a power of two so repeat sweeps of any size
     reuse the compile cache.  Results come back as one
     ``simulate_hpl_fast``-style dict per scenario, in input order.
+
+    ``bucket=(n_panels_max, P_max, Q_max)`` forces every scenario into
+    ONE padded shape bucket: the whole sweep runs as a single compiled
+    vmapped program regardless of geometry mix (the TOP500 fleet path —
+    one compile for a whole list).  Each component is rounded up to a
+    cache-friendly bucket size; a config that doesn't fit raises.
     """
     cfg_list = [configs] if isinstance(configs, HPLConfig) else list(configs)
     prm_list = [params] if isinstance(params, FastSimParams) else list(params)
@@ -395,6 +402,8 @@ def sweep_hpl(configs: Configs, params: Params) -> List[dict]:
         raise ValueError(
             f"sweep_hpl: {len(cfg_list)} configs vs {len(prm_list)} params "
             "(must match, or one side must be a single scenario)")
+    if bucket is not None:
+        return _sweep_forced_bucket(cfg_list, prm_list, bucket)
 
     by_cfg: Dict[Tuple[int, int, int, int], List[int]] = {}
     for idx, cfg in enumerate(cfg_list):
@@ -427,3 +436,29 @@ def sweep_hpl(configs: Configs, params: Params) -> List[dict]:
                                 geom[:, 3], _stack_params(prm_list, lanes)))
             times[idxs] = out[:len(idxs)]
     return [_result(cfg, float(t)) for cfg, t in zip(cfg_list, times)]
+
+
+def _sweep_forced_bucket(cfg_list: Sequence[HPLConfig],
+                         prm_list: Sequence[FastSimParams],
+                         bucket: Tuple[int, int, int]) -> List[dict]:
+    """One 'batch'-mode dispatch for the whole sweep under a shared
+    (rounded-up) bucket — exactly one traced program per distinct
+    forced bucket, however many geometries are mixed in."""
+    n_panels_max, P_max, Q_max = (_bucket(b) for b in bucket)
+    for cfg in cfg_list:
+        if (cfg.n_panels > n_panels_max or cfg.P > P_max
+                or cfg.Q > Q_max):
+            raise ValueError(
+                f"sweep_hpl: config (N={cfg.N}, nb={cfg.nb}, P={cfg.P}, "
+                f"Q={cfg.Q}) exceeds forced bucket "
+                f"({n_panels_max}, {P_max}, {Q_max})")
+    lanes = _pad_pow2(list(range(len(cfg_list))))
+    geom = np.asarray([[cfg_list[i].N, cfg_list[i].nb,
+                        cfg_list[i].P, cfg_list[i].Q]
+                       for i in lanes], np.int64)
+    with enable_x64(True):
+        fn = _compiled(n_panels_max, P_max, Q_max, "batch")
+        out = np.asarray(fn(geom[:, 0], geom[:, 1], geom[:, 2], geom[:, 3],
+                            _stack_params(prm_list, lanes)))
+    return [_result(cfg, float(t))
+            for cfg, t in zip(cfg_list, out[:len(cfg_list)])]

@@ -15,7 +15,9 @@ points for what-if studies.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+import dataclasses
+import difflib
+from typing import Dict, Iterable, List, Sequence
 
 from .spec import FabricSpec, MPIStackSpec, NodeSpec, Platform, ScaleSpec
 
@@ -29,12 +31,53 @@ def register(platform: Platform, *, overwrite: bool = False) -> Platform:
     return platform
 
 
+def bulk_register(platforms: Iterable[Platform], *, namespace: str,
+                  overwrite: bool = False) -> List[Platform]:
+    """Register a generated list under ``namespace/`` so ingested specs
+    (e.g. a whole TOP500 list) can never collide with built-in names.
+
+    Each platform is re-named ``f"{namespace}/{platform.name}"``.  The
+    batch is validated up front — a duplicate inside the batch or a
+    collision with an already-registered name raises before anything is
+    registered (all-or-nothing), unless ``overwrite=True``.  Returns the
+    renamed platforms in input order.
+    """
+    if not namespace or "/" in namespace:
+        raise ValueError(f"bulk_register: namespace {namespace!r} must be "
+                         "a non-empty string without '/'")
+    renamed = [dataclasses.replace(p, name=f"{namespace}/{p.name}")
+               for p in platforms]
+    seen: Dict[str, int] = {}
+    for p in renamed:
+        if p.name in seen:
+            raise ValueError(f"bulk_register: duplicate name {p.name!r} "
+                             "inside the batch")
+        seen[p.name] = 1
+        if not overwrite and p.name in _REGISTRY:
+            raise ValueError(f"bulk_register: {p.name!r} already "
+                             "registered (pass overwrite=True to replace)")
+    for p in renamed:
+        _REGISTRY[p.name] = p
+    return renamed
+
+
+def unregister(names: Sequence[str]) -> None:
+    """Remove registered names (missing ones are ignored) — the cleanup
+    companion to ``bulk_register`` for tests and re-ingestion."""
+    for name in names:
+        _REGISTRY.pop(name, None)
+
+
 def get_platform(name: str) -> Platform:
     try:
         return _REGISTRY[name]
     except KeyError:
-        raise KeyError(f"unknown platform {name!r}; registered: "
-                       f"{', '.join(sorted(_REGISTRY))}") from None
+        close = difflib.get_close_matches(name, _REGISTRY, n=3, cutoff=0.5)
+        hint = (f"did you mean: {', '.join(close)}?" if close
+                else "no close match")
+        raise KeyError(f"unknown platform {name!r}; {hint} "
+                       f"({len(_REGISTRY)} platforms registered; "
+                       "see list_platforms())") from None
 
 
 def list_platforms() -> List[str]:

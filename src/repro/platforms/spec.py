@@ -133,6 +133,10 @@ class Platform:
     scale: ScaleSpec = ScaleSpec(n_nodes=1)
     # DES-fitted FastSimParams overrides, e.g. (("bcast_bw_scale", 0.9),)
     calibration: Tuple[Tuple[str, float], ...] = ()
+    # inference audit trail for generated specs (top500 ingestion): each
+    # entry is a (key, value) string pair, e.g. ("cpu_family", "xeon-avx512")
+    # or ("peak_source", "rpeak-rescaled"); empty for hand-written specs
+    provenance: Tuple[Tuple[str, str], ...] = ()
     notes: str = ""
 
     # ------------------------------------------------------ backends
@@ -179,6 +183,10 @@ class Platform:
     def calibration_dict(self) -> Dict[str, float]:
         return dict(self.calibration)
 
+    @property
+    def provenance_dict(self) -> Dict[str, str]:
+        return dict(self.provenance)
+
     def with_calibration(self, overrides: Dict[str, float]) -> "Platform":
         """A copy with ``overrides`` merged into the calibration table."""
         merged = dict(self.calibration)
@@ -192,6 +200,7 @@ class Platform:
         d["fabric"]["dims"] = list(self.fabric.dims)
         d["scale"]["grid"] = list(self.scale.grid)
         d["calibration"] = [list(kv) for kv in self.calibration]
+        d["provenance"] = [list(kv) for kv in self.provenance]
         return d
 
     def to_json(self, **kw) -> str:
@@ -210,6 +219,8 @@ class Platform:
                    scale=ScaleSpec(**sc),
                    calibration=tuple((k, float(v))
                                      for k, v in d.get("calibration", [])),
+                   provenance=tuple((k, str(v))
+                                    for k, v in d.get("provenance", [])),
                    notes=d.get("notes", ""))
 
     @classmethod

@@ -1,5 +1,6 @@
 from .engine import ServeEngine, Request
-from .predict import HPLPredictionService, PredictRequest
+from .predict import (HPLPredictionService, PredictRequest,
+                      predict_top500)
 
 __all__ = ["ServeEngine", "Request", "HPLPredictionService",
-           "PredictRequest"]
+           "PredictRequest", "predict_top500"]

@@ -116,9 +116,21 @@ class HPLPredictionService:
 
     def predict_batch(self, scenarios: Sequence[PredictRequest]
                       ) -> Dict[int, dict]:
-        """Submit + flush in one call — the RPC-handler entry point."""
+        """Submit + flush in one call — the RPC-handler entry point.
+
+        All-or-nothing on resolution: every request is resolved before
+        any is enqueued, so one bad request (unknown platform name
+        mid-batch, missing cfg) rejects the whole call and leaves the
+        queue exactly as it was.  An empty batch returns {} without
+        dispatching anything.
+        """
+        scenarios = list(scenarios)
         for req in scenarios:
-            self.submit(req)
+            self._resolve(req)
+        if not scenarios:
+            return {}
+        for req in scenarios:
+            self.submit(req)        # _resolve is idempotent
         return self.flush()
 
     def predict_platforms(self, names: Sequence[str],
@@ -130,3 +142,45 @@ class HPLPredictionService:
                 for i, name in enumerate(names)]
         out = self.predict_batch(reqs)
         return {name: out[i] for i, name in enumerate(names)}
+
+    def predict_top500(self, csv_path, **kw) -> dict:
+        """Serve a whole TOP500 list export: ranked predicted-vs-
+        published Rmax report as a JSON-safe dict (delegates to
+        ``repro.top500.predict_top500``; same keywords)."""
+        report = predict_top500(csv_path, **kw)
+        self.stats["requests"] += len(report.entries)
+        self.stats["scenarios"] += len(report.entries)
+        self.stats["batches"] += 1
+        return report.to_dict()
+
+
+def predict_top500(csv_path, *, namespace: Optional[str] = None,
+                   overwrite: bool = False, **kw):
+    """Parse a TOP500 list export, infer a Platform per row, and predict
+    the whole fleet in one batched sweep — returns the ``FleetReport``
+    (rows the lenient parser rejected surface in ``report.skipped_rows``;
+    a list with *no* parseable rows raises with the reasons).
+
+    ``namespace="top500"`` additionally registers every inferred spec as
+    ``top500/<name>`` so individual machines can then be served by name
+    through ``PredictRequest(platform=...)``; re-ingesting the same list
+    needs ``overwrite=True`` (forwarded to ``bulk_register``).  Remaining
+    keywords reach ``repro.top500.predict_fleet`` (``tuning=``,
+    ``calibrate=``, ``infer_kw=``).
+    """
+    from repro.top500 import infer_platforms, parse_top500, predict_fleet
+    parsed = parse_top500(csv_path)
+    if not parsed.rows:
+        raise ValueError(
+            f"predict_top500: no parseable rows in {csv_path!r}; "
+            f"skipped: {parsed.skipped[:5]}"
+            f"{'...' if len(parsed.skipped) > 5 else ''}")
+    platforms = infer_platforms(parsed.rows,
+                                **(kw.pop("infer_kw", None) or {}))
+    if namespace is not None:
+        from repro.platforms import bulk_register
+        platforms = bulk_register(platforms, namespace=namespace,
+                                  overwrite=overwrite)
+    report = predict_fleet(platforms, **kw)
+    report.skipped_rows = list(parsed.skipped)
+    return report

@@ -1,0 +1,90 @@
+"""Residual calibration: fit the systematic sim-vs-published gap.
+
+Cornebize & Legrand's central finding is that simulation predicts
+*relative* behavior faithfully while absolute accuracy hinges on
+calibration.  Heuristic-inferred fleets inherit a systematic per-fabric
+bias (our fat-tree geometry is conventional, not the machine's wiring;
+contention scales are uncalibrated), so we fit one multiplicative
+efficiency factor per fabric family — median(published / predicted)
+over a deterministic training split — and report error on the held-out
+rest.  The median keeps single-machine outliers (odd published runs,
+mis-parsed rows) from dragging the family factor.
+
+Split rule (deterministic, stratified): entries are grouped by family
+and sorted by published Rmax; even positions train, odd positions test.
+A family with a single machine trains only (its factor would otherwise
+be fit on nothing); families never seen in training fall back to the
+global factor.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from typing import Dict, List
+
+GLOBAL = "__global__"
+
+
+@dataclasses.dataclass
+class CalibrationResult:
+    factors: Dict[str, float]          # family -> efficiency factor
+    train_median_abs_err: float
+    heldout_median_abs_err: float
+    n_train: int
+    n_test: int
+
+    def factor_for(self, family: str) -> float:
+        return self.factors.get(family, self.factors[GLOBAL])
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        held = d["heldout_median_abs_err"]
+        if held != held:                    # NaN -> null (strict JSON)
+            d["heldout_median_abs_err"] = None
+        return d
+
+
+def assign_splits(entries) -> None:
+    """Stamp each entry's ``split`` in place (see module docstring).
+    Entries without a published Rmax can't train or score — they keep
+    ``split == ""`` and only receive the fitted factor."""
+    by_family: Dict[str, List] = {}
+    for e in entries:
+        if e.published_tflops > 0:
+            by_family.setdefault(e.family, []).append(e)
+    for group in by_family.values():
+        group.sort(key=lambda e: -e.published_tflops)
+        for i, e in enumerate(group):
+            e.split = "train" if (i % 2 == 0 or len(group) == 1) \
+                else "test"
+
+
+def calibrate_fleet(entries) -> CalibrationResult:
+    """Fit family factors on the train split, apply to every entry, and
+    measure held-out error.  Mutates ``entries`` (sets ``split`` and
+    ``calibrated_tflops``) and returns the fit."""
+    assign_splits(entries)
+    train = [e for e in entries if e.split == "train"]
+    if not train:
+        raise ValueError("calibrate_fleet: no entries with a published "
+                         "Rmax to train on")
+    ratios: Dict[str, List[float]] = {}
+    for e in train:
+        if e.predicted_tflops > 0:
+            ratios.setdefault(e.family, []).append(
+                e.published_tflops / e.predicted_tflops)
+    factors = {fam: statistics.median(rs) for fam, rs in ratios.items()}
+    factors[GLOBAL] = statistics.median(
+        [e.published_tflops / e.predicted_tflops
+         for e in train if e.predicted_tflops > 0])
+    for e in entries:
+        e.calibrated_tflops = e.predicted_tflops * \
+            factors.get(e.family, factors[GLOBAL])
+    test = [e for e in entries if e.split == "test"]
+    return CalibrationResult(
+        factors=factors,
+        train_median_abs_err=statistics.median(
+            [abs(e.rel_err) for e in train]),
+        heldout_median_abs_err=statistics.median(
+            [abs(e.rel_err) for e in test]) if test else float("nan"),
+        n_train=len(train), n_test=len(test))

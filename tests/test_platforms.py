@@ -73,8 +73,11 @@ def test_platform_builds_both_backends(name):
     assert cfg.n_ranks == P * Q
 
 
-def test_registry_unknown_name_lists_known():
+def test_registry_unknown_name_suggests_close_matches():
+    # a near-miss gets a difflib suggestion, not a registry dump
     with pytest.raises(KeyError, match="frontera"):
+        get_platform("fronterra")
+    with pytest.raises(KeyError, match="platforms registered"):
         get_platform("no-such-machine")
 
 

@@ -94,6 +94,57 @@ def test_waterfill_maxmin_properties(data):
         assert ok, (f, rates[f])
 
 
+_FINITE = dict(allow_nan=False, allow_infinity=False)
+
+
+@st.composite
+def top500_rows(draw):
+    """Arbitrary-ish list rows: unicode site/system names, any of the
+    known processor/interconnect vocabularies plus unknown strings,
+    optional fields missing (zero/empty)."""
+    from repro.top500 import Top500Row
+    procs = ["Intel Xeon Platinum 8280 28C 2.7GHz",
+             "Fujitsu A64FX 48C 2.2GHz", "Power BQC 16C 1.60GHz",
+             "Sunway SW26010 260C 1.45GHz", "Mystery Chip 9000",
+             "AMD EPYC 7742 64C 2.25GHz", "IBM POWER9 22C 3.07GHz"]
+    nets = ["Mellanox InfiniBand HDR", "Aries interconnect",
+            "Tofu interconnect D", "Custom 5D Torus", "25G Ethernet",
+            "Intel Omni-Path", "Slingshot-10", "something bespoke"]
+    cores = draw(st.integers(64, 10_000_000))
+    rpeak = draw(st.floats(1.0, 1e6, **_FINITE))
+    return Top500Row(
+        rank=draw(st.integers(1, 500)),
+        site=draw(st.text(max_size=40)),
+        system=draw(st.text(max_size=40)),
+        processor=draw(st.sampled_from(procs)),
+        cores=cores,
+        interconnect=draw(st.sampled_from(nets)),
+        rmax_tflops=rpeak * draw(st.floats(0.05, 1.0, **_FINITE)),
+        rpeak_tflops=rpeak,
+        accel_cores=draw(st.sampled_from([0, 0, cores // 2])),
+        accelerator=draw(st.sampled_from(["", "NVIDIA Tesla V100"])),
+        country=draw(st.text(max_size=20)),
+        year=draw(st.sampled_from([0, 2016, 2020])),
+        power_kw=draw(st.floats(0, 1e5, **_FINITE)))
+
+
+@settings(max_examples=40, deadline=None)
+@given(row=top500_rows())
+def test_inferred_platform_json_round_trip(row):
+    """Satellite invariant: Platform JSON serialization survives any
+    inferred spec — unicode site/system names in name/notes/provenance,
+    missing optional fields, every fabric kind the tables emit."""
+    from repro.platforms import Platform
+    from repro.top500 import infer_platform
+    plat = infer_platform(row)
+    assert Platform.from_dict(plat.to_dict()) == plat
+    back = Platform.from_json(plat.to_json())
+    assert back == plat
+    assert back.provenance == plat.provenance
+    # the round-tripped spec still builds fastsim params
+    assert back.fastsim().peak_flops > 0
+
+
 @settings(max_examples=10, deadline=None)
 @given(seed=st.integers(0, 2 ** 16))
 def test_model_causality(seed):
