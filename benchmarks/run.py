@@ -22,6 +22,7 @@ MODULES = [
     "benchmarks.sec5_whatif",           # §V: what-if analyses
     "benchmarks.sweep_bench",           # batched sweep engine vs loop
     "benchmarks.tpu_predict",           # TPU adaptation table
+    "benchmarks.train_step",            # transformer workload sweep
     "benchmarks.top500_fleet",          # TOP500 list fleet prediction
     "benchmarks.trace_breakdown",       # trace-derived comm/compute split
     "benchmarks.kernels_bench",         # Pallas kernels
@@ -36,6 +37,7 @@ SMOKE_MODULES = [
     "benchmarks.sec5_whatif",
     "benchmarks.sweep_bench",
     "benchmarks.tpu_predict",
+    "benchmarks.train_step",
     "benchmarks.top500_fleet",
     "benchmarks.trace_breakdown",
 ]

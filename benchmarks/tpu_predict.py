@@ -46,6 +46,14 @@ def _hpl_on_tpu_rows():
 
 
 def run(quick: bool = True):
+    # every chip/ICI number below comes from the tpu-v5e-pod registry
+    # entry; fail loudly if the legacy constants ever drift from the spec
+    from repro.core.simxla import SimXLA, assert_registry_consistent
+    from repro.platforms import get_platform
+
+    plat = get_platform("tpu-v5e-pod")
+    assert_registry_consistent(plat)
+
     rows = _hpl_on_tpu_rows()
     rec_dir = Path("experiments/dryrun")
     if not rec_dir.exists():
@@ -53,8 +61,7 @@ def run(quick: bool = True):
                      "derived": "no dry-run records; run "
                                 "repro.launch.dryrun --all"})
         return rows
-    from repro.core.simxla import SimXLA
-    sim = SimXLA()
+    sim = SimXLA.for_platform(plat)
     files = sorted(rec_dir.glob("*__16x16.json"))
     if quick:
         keep = {"qwen3-moe-235b-a22b", "granite-34b", "mamba2-780m",
@@ -67,7 +74,8 @@ def run(quick: bool = True):
         p = sim.predict(rec)
         bound = rec["roofline"]["bound_s"]
         mf = rec["roofline"].get("model_flops", 0)
-        mfu = (mf / max(p.step_s, 1e-12)) / (rec["chips"] * 197e12)
+        mfu = (mf / max(p.step_s, 1e-12)) \
+            / (rec["chips"] * plat.node.peak_flops)
         rows.append({
             "name": f"tpu.{rec['arch']}.{rec['shape']}",
             "us_per_call": p.step_s * 1e6,

@@ -1,0 +1,72 @@
+"""Train-step prediction benchmark: the transformer workload over
+registry platforms, at sweep scale.
+
+Covers the second application of the workload layer the way
+``table2_top500``/``sweep_bench`` cover HPL: per-platform step-time
+predictions (DES-cross-validated elsewhere), plus a model-size x mesh x
+hardware what-if grid served by the batched stepsim path — ≥16 scenarios
+through ONE compiled program (the ``compiles=`` field in ``derived`` is
+asserted by tests and tracked by CI artifacts).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+PLATFORMS = ("tpu-v5e-pod", "syn-torus-fugaku-4k", "syn-mp-2pod-v5e")
+
+
+def run(quick: bool = True):
+    from repro.platforms import get_platform
+    from repro.workloads import get_workload, trace_count
+
+    rows = []
+    wl = get_workload("transformer")
+    for name in PLATFORMS:
+        plat = get_platform(name)
+        t0 = time.perf_counter()
+        pred = wl.predict(plat)
+        wall = time.perf_counter() - t0
+        rows.append({
+            "name": f"train_step.predict_{name}",
+            "us_per_call": wall * 1e6,
+            "derived": f"step={pred['step_s']*1e3:.3f}ms;"
+                       f"mfu={pred['mfu']:.3f};"
+                       f"tok_s={pred['tokens_per_s']:.3g}",
+        })
+
+    # what-if grid: model size x link bandwidth x layer count, one
+    # compile for the whole padded scenario batch
+    plat = get_platform("tpu-v5e-pod")
+    model = wl.fastsim_model(plat)
+    base = model.params
+    grid = []
+    sizes = (1.0, 2.0, 4.0) if quick else (1.0, 1.5, 2.0, 3.0, 4.0)
+    for fscale in sizes:                 # model width
+        for lscale in (1.0, 2.0):        # link bandwidth
+            for layers in (8.0, 16.0, 32.0):
+                grid.append(dataclasses.replace(
+                    base,
+                    flops_per_layer=base.flops_per_layer * fscale,
+                    bytes_per_layer=base.bytes_per_layer * fscale,
+                    coll_model_bytes=base.coll_model_bytes * fscale,
+                    link_bw=base.link_bw * lscale,
+                    n_layers=layers))
+    c0 = trace_count()
+    t0 = time.perf_counter()
+    res = model.sweep(grid)
+    wall = time.perf_counter() - t0
+    compiles = trace_count() - c0
+    best = min(res, key=lambda r: r["time_s"])
+    rows.append({
+        "name": "train_step.whatif_sweep",
+        "us_per_call": wall / len(grid) * 1e6,
+        "derived": f"scenarios={len(grid)};compiles={compiles};"
+                   f"wall_s={wall:.2f};best_step={best['step_s']*1e3:.2f}ms",
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

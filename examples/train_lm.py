@@ -6,6 +6,13 @@ pipeline with checkpoint/restart and straggler monitoring.
 
 The 100m preset is a ~108M-parameter qwen2-family model (d=768, L=10,
 vocab 50257) — "train a ~100M model for a few hundred steps" on CPU.
+
+After training, the same model dims are fed through the transformer
+*workload* (``repro.workloads``) to predict what one train step would
+cost on an accelerator platform (``--platform``, default tpu-v5e-pod).
+Every chip/ICI number comes from the platform registry — nothing is
+hardcoded here, and the run fails loudly if the legacy constants drift
+from the spec.
 """
 import argparse
 import dataclasses
@@ -33,6 +40,8 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=6e-4)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--platform", default="tpu-v5e-pod",
+                    help="registry platform for the step-time prediction")
     args = ap.parse_args()
 
     cfg = ModelConfig(name=f"lm-{args.preset}", family="dense",
@@ -54,6 +63,25 @@ def main():
           f"checkpoints in {args.ckpt_dir}")
     # single-step losses are noisy at batch 1: compare windowed means
     assert tail < head + 0.05, "loss must not increase (windowed)"
+
+    # what would this step cost on real accelerators?  Same model dims
+    # through the workload layer, chip/ICI numbers from the registry.
+    from repro.core.simxla import assert_registry_consistent
+    from repro.platforms import get_platform
+    from repro.workloads import get_workload
+
+    plat = get_platform(args.platform)
+    if args.platform == "tpu-v5e-pod":
+        assert_registry_consistent(plat)
+    wl = get_workload("transformer", num_layers=cfg.num_layers,
+                      d_model=cfg.d_model, d_ff=cfg.d_ff,
+                      vocab=cfg.vocab_size, seq_len=args.seq,
+                      batch_per_replica=args.batch)
+    pred = wl.predict(plat)
+    print(f"[example] predicted step on {plat.name}: "
+          f"{pred['step_s']*1e3:.3f} ms "
+          f"({pred['tokens_per_s']:.3g} tok/s, mfu={pred['mfu']:.3f}; "
+          f"peak {plat.node.peak_flops/1e12:.0f} TF/chip from the spec)")
 
 
 if __name__ == "__main__":

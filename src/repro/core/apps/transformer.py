@@ -24,7 +24,7 @@ from repro.core.hardware.network import Network
 from repro.core.hardware.node import NodeModel, TPU_V5E
 from repro.core.hardware.topology import Torus, MultiPod
 from repro.core.simmpi import SimMPI
-from repro.core.simxla import ICIParams, ICI
+from repro.core.simxla import ICIParams, default_ici, ici_from_platform
 
 
 @dataclasses.dataclass
@@ -72,29 +72,62 @@ class StepWorkload:
 class TransformerStepSim:
     def __init__(self, workload: StepWorkload, *,
                  mesh: Tuple[int, int] = (16, 16), pods: int = 1,
-                 chip: NodeModel = TPU_V5E, ici: ICIParams = ICI,
+                 chip: Optional[NodeModel] = None,
+                 ici: Optional[ICIParams] = None,
+                 mpi_overhead: float = 5e-7,
                  straggler: Optional[Tuple[int, float]] = None,
                  jitter: float = 0.0, seed: int = 0,
                  trace: bool = False):
         self.workload = workload
         self.mesh = mesh
         self.pods = pods
+        self.chip = chip if chip is not None else TPU_V5E
+        ici = ici or default_ici()
         self.n_per_pod = mesh[0] * mesh[1]
         self.n = self.n_per_pod * pods
         self.engine = Engine(trace=trace)
         if pods == 1:
-            topo = Torus(mesh, link_bw=ici.link_bw)
+            topo = Torus(mesh, link_bw=ici.link_bw,
+                         hop_latency=ici.hop_latency,
+                         base_latency=ici.base_latency)
         else:
-            topo = MultiPod([Torus(mesh, link_bw=ici.link_bw)
+            topo = MultiPod([Torus(mesh, link_bw=ici.link_bw,
+                                   hop_latency=ici.hop_latency,
+                                   base_latency=ici.base_latency)
                              for _ in range(pods)],
                             self.n_per_pod, dcn_bw_per_node=ici.dcn_bw,
                             dcn_latency=ici.dcn_latency)
         self.net = Network(self.engine, topo)
-        self.mpi = SimMPI(self.engine, self.net, self.n)
+        self.mpi = SimMPI(self.engine, self.net, self.n,
+                          overhead=mpi_overhead)
         self.straggler = straggler
         self.jitter = jitter
         self.seed = seed
         self.finish: Dict[int, float] = {}
+
+    @classmethod
+    def from_platform(cls, workload: StepWorkload, platform, *,
+                      mesh: Optional[Tuple[int, int]] = None,
+                      pods: Optional[int] = None,
+                      **kw) -> "TransformerStepSim":
+        """Build the DES from a ``repro.platforms.Platform`` spec: chip,
+        ICI, and MPI-stack knobs all come from the spec; the (rows, cols)
+        mesh defaults to the platform's torus dims (a k-D torus collapses
+        to ``(prod(dims[:-1]), dims[-1])``) and ``pods`` to the fabric's
+        pod count."""
+        fab = platform.fabric
+        if fab.kind not in ("torus", "multipod"):
+            raise ValueError(
+                f"platform {platform.name!r} has a {fab.kind!r} fabric; "
+                "the transformer step DES needs torus or multipod")
+        if mesh is None:
+            mesh = (math.prod(fab.dims[:-1]), fab.dims[-1])
+        if pods is None:
+            pods = fab.n_pods if fab.kind == "multipod" else 1
+        kw.setdefault("chip", platform.node_model())
+        kw.setdefault("ici", ici_from_platform(platform))
+        kw.setdefault("mpi_overhead", platform.mpi.overhead)
+        return cls(workload, mesh=tuple(mesh), pods=pods, **kw)
 
     # mesh coordinate helpers (rank = pod*n_per_pod + row*cols + col)
     def _groups(self, rank: int) -> Dict[str, List[int]]:

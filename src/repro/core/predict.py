@@ -3,10 +3,14 @@
 ``predict_cell(arch, shape, mesh)`` reads the dry-run record (lower+compile
 already done by launch/dryrun.py) and returns SimXLA's analytic step-time
 prediction; ``predict_cell_des`` runs the full DES with contention /
-stragglers.  ``whatif`` re-predicts under hardware deltas (faster links,
-more HBM bandwidth, straggler chips) — §V of the paper, TPU edition.
-``whatif_grid`` is the HPL edition at sweep scale: a cartesian grid of
-hardware deltas evaluated as one batched fastsim program.
+stragglers.  Chip and ICI parameters default to the ``tpu-v5e-pod``
+registry spec and can be re-derived from any other platform via
+``platform=``.  ``whatif`` re-predicts under hardware deltas (faster
+links, more HBM bandwidth, straggler chips) — §V of the paper, TPU
+edition.  ``whatif_grid`` is the sweep-scale edition: a cartesian grid of
+hardware deltas evaluated as one batched program, for an ``HPLConfig``
+(legacy form) or for any registered workload's fast model
+(``whatif_grid(workload, platform, axes)``).
 """
 from __future__ import annotations
 
@@ -17,11 +21,18 @@ from pathlib import Path
 from typing import Dict, Mapping, Optional, Sequence
 
 from repro.configs import get_config, get_shape
-from .hardware.node import NodeModel, TPU_V5E
-from .simxla import ICIParams, ICI, SimXLA, StepPrediction
+from .hardware.node import NodeModel
+from .simxla import ICIParams, SimXLA, StepPrediction, ici_from_platform
 from .apps.transformer import StepWorkload, TransformerStepSim
 
 DRYRUN_DIR = Path("experiments/dryrun")
+
+
+def _resolve_platform(platform):
+    if isinstance(platform, str):
+        from repro.platforms import get_platform
+        return get_platform(platform)
+    return platform
 
 
 def load_record(arch: str, shape: str, mesh: str = "16x16",
@@ -35,21 +46,37 @@ def load_record(arch: str, shape: str, mesh: str = "16x16",
 
 
 def predict_cell(arch: str, shape: str, mesh: str = "16x16",
-                 chip: NodeModel = TPU_V5E, ici: ICIParams = ICI,
+                 chip: Optional[NodeModel] = None,
+                 ici: Optional[ICIParams] = None,
                  overlap: float = 0.7,
-                 dryrun_dir: Path = DRYRUN_DIR) -> StepPrediction:
+                 dryrun_dir: Path = DRYRUN_DIR,
+                 platform="tpu-v5e-pod") -> StepPrediction:
+    """Analytic step-time prediction for one compiled cell.  Hardware
+    numbers come from ``platform`` (registry name or Platform spec);
+    explicit ``chip``/``ici`` win over the spec-derived values."""
     rec = load_record(arch, shape, mesh, dryrun_dir)
+    plat = _resolve_platform(platform)
+    if chip is None:
+        chip = plat.node_model()
+    if ici is None:
+        ici = ici_from_platform(plat)
     return SimXLA(chip=chip, ici=ici, overlap=overlap).predict(rec)
 
 
 def predict_cell_des(arch: str, shape: str, mesh: str = "16x16",
                      straggler=None, jitter: float = 0.0,
-                     dryrun_dir: Path = DRYRUN_DIR) -> Dict:
+                     dryrun_dir: Path = DRYRUN_DIR,
+                     platform="tpu-v5e-pod") -> Dict:
     rec = load_record(arch, shape, mesh, dryrun_dir)
     cfg = get_config(arch)
-    wl = StepWorkload.from_dryrun_record(rec, cfg.num_layers)
+    plat = _resolve_platform(platform)
+    wl = StepWorkload.from_dryrun_record(rec, cfg.num_layers,
+                                         chip=plat.node_model())
     pods = 2 if mesh == "2x16x16" else 1
     sim = TransformerStepSim(wl, mesh=(16, 16), pods=pods,
+                             chip=plat.node_model(),
+                             ici=ici_from_platform(plat),
+                             mpi_overhead=plat.mpi.overhead,
                              straggler=straggler, jitter=jitter)
     return sim.run()
 
@@ -57,14 +84,20 @@ def predict_cell_des(arch: str, shape: str, mesh: str = "16x16",
 def whatif(arch: str, shape: str, mesh: str = "16x16", *,
            link_bw_scale: float = 1.0, hbm_bw_scale: float = 1.0,
            peak_scale: float = 1.0,
-           dryrun_dir: Path = DRYRUN_DIR) -> Dict:
+           dryrun_dir: Path = DRYRUN_DIR,
+           platform="tpu-v5e-pod") -> Dict:
     """Paper §V for the TPU case study: predict the win from a hardware
     change without re-running anything on hardware."""
-    base = predict_cell(arch, shape, mesh, dryrun_dir=dryrun_dir)
-    chip = dataclasses.replace(TPU_V5E,
-                               peak_flops=TPU_V5E.peak_flops * peak_scale,
-                               mem_bw=TPU_V5E.mem_bw * hbm_bw_scale)
-    ici = dataclasses.replace(ICI, link_bw=ICI.link_bw * link_bw_scale)
+    plat = _resolve_platform(platform)
+    base_chip = plat.node_model()
+    base_ici = ici_from_platform(plat)
+    base = predict_cell(arch, shape, mesh, chip=base_chip, ici=base_ici,
+                        dryrun_dir=dryrun_dir)
+    chip = dataclasses.replace(base_chip,
+                               peak_flops=base_chip.peak_flops * peak_scale,
+                               mem_bw=base_chip.mem_bw * hbm_bw_scale)
+    ici = dataclasses.replace(base_ici,
+                              link_bw=base_ici.link_bw * link_bw_scale)
     new = predict_cell(arch, shape, mesh, chip=chip, ici=ici,
                        dryrun_dir=dryrun_dir)
     return {"baseline_s": base.step_s, "whatif_s": new.step_s,
@@ -72,32 +105,53 @@ def whatif(arch: str, shape: str, mesh: str = "16x16", *,
             "baseline": base, "whatif": new}
 
 
-def whatif_grid(cfg, base_params, axes: Mapping[str, Sequence[float]], *,
-                mode: str = "scale") -> list:
+def whatif_grid(scenario, base_params=None, axes: Mapping[str, Sequence[float]]
+                = None, *, mode: str = "scale") -> list:
     """Paper §V at sweep scale: evaluate a cartesian grid of hardware
-    what-ifs for one HPL config in a single batched fastsim program.
+    what-ifs as one batched fastsim program.
 
-    ``axes`` maps FastSimParams field names to multipliers
-    (``mode="scale"``, default) or absolute values (``mode="abs"``), e.g.
+    Two forms:
+
+    * legacy HPL: ``whatif_grid(cfg, base_params, axes)`` with an
+      ``HPLConfig`` and a ``FastSimParams`` baseline;
+    * workload-generic: ``whatif_grid(workload, platform, axes)`` with
+      any ``repro.workloads.Workload`` (the baseline params come from
+      ``workload.fastsim_model(platform)``), or directly
+      ``whatif_grid(model, None, axes)`` with a prebuilt ``FastModel``.
+
+    ``axes`` maps params field names to multipliers (``mode="scale"``,
+    default) or absolute values (``mode="abs"``), e.g.
     ``{"link_bw": [1, 2, 4], "mem_bw": [1.0, 1.25]}`` — 6 scenarios plus
     the baseline, all served by one compile (bucketed sweep engine).
 
     Returns one dict per grid point, in ``itertools.product`` order, with
-    the axis values, ``time_s``/``gflops``/``tflops``, and ``speedup``
-    over the unmodified baseline.
+    the axis values, the model's result fields (``time_s`` always), and
+    ``speedup`` over the unmodified baseline.
     """
-    from .fastsim import sweep_hpl
-
     if mode not in ("scale", "abs"):
         raise ValueError(f"whatif_grid: mode must be scale|abs, got {mode}")
+    if hasattr(scenario, "fastsim_model"):          # a Workload
+        if base_params is None:
+            raise ValueError("whatif_grid(workload, platform, axes): the "
+                             "second argument must be the platform")
+        model = scenario.fastsim_model(_resolve_platform(base_params))
+    elif hasattr(scenario, "sweep"):                # a prebuilt FastModel
+        model = scenario
+        if base_params is not None:
+            model = dataclasses.replace(model, params=base_params)
+    else:                                           # legacy HPLConfig form
+        from repro.workloads.hpl import HPLFastModel
+        model = HPLFastModel(cfg=scenario, params=base_params)
+
+    base = model.params
     names = list(axes)
     combos = list(itertools.product(*[axes[n] for n in names]))
     grid = []
     for combo in combos:
-        over = {n: (getattr(base_params, n) * v if mode == "scale" else v)
+        over = {n: (getattr(base, n) * v if mode == "scale" else v)
                 for n, v in zip(names, combo)}
-        grid.append(dataclasses.replace(base_params, **over))
-    res = sweep_hpl(cfg, [base_params] + grid)   # lane 0 = baseline
+        grid.append(dataclasses.replace(base, **over))
+    res = model.sweep([base] + grid)   # lane 0 = baseline
     base_t = res[0]["time_s"]
     out = []
     for combo, r in zip(combos, res[1:]):

@@ -14,14 +14,14 @@ from .spec import (FabricSpec, MPIStackSpec, NodeSpec, Platform,
                    ScaleSpec)
 from .registry import (bulk_register, get_platform, list_platforms,
                        register, unregister)
-from .build import DESStack, build_des, build_fastsim, build_node, \
-    build_topology
+from .build import DESStack, build_des, build_fastsim, build_ici, \
+    build_node, build_topology
 
 __all__ = ["FabricSpec", "MPIStackSpec", "NodeSpec", "Platform",
            "ScaleSpec", "get_platform", "list_platforms", "register",
            "bulk_register", "unregister",
-           "DESStack", "build_des", "build_fastsim", "build_node",
-           "build_topology", "fit_fastsim_to_des", "des_probe_runs",
+           "DESStack", "build_des", "build_fastsim", "build_ici",
+           "build_node", "build_topology", "fit_fastsim_to_des", "des_probe_runs",
            "BridgeFit"]
 
 _BRIDGE_NAMES = ("fit_fastsim_to_des", "des_probe_runs", "BridgeFit",

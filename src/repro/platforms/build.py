@@ -99,6 +99,17 @@ def derived_net_latency(platform: Platform) -> float:
     return platform.mpi.overhead + fab.base_latency + 2.0 * fab.hop_latency
 
 
+def build_ici(platform: Platform, **overrides):
+    """ICI parameters (the TPU-world analytic network section) derived
+    from the same spec that builds the DES topology — the third backend
+    adapter next to ``build_des``/``build_fastsim``.  Keyword overrides
+    win over the spec-derived values."""
+    # simxla is jax-free but lives in core; resolve lazily so this
+    # module stays importable from either side of the package boundary
+    from repro.core.simxla import ici_from_platform
+    return ici_from_platform(platform, **overrides)
+
+
 def build_fastsim(platform: Platform, *, calibrated: bool = True):
     from repro.core.fastsim import FastSimParams
 

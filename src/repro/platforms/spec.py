@@ -157,6 +157,12 @@ class Platform:
         from .build import build_node
         return build_node(self.node)
 
+    def ici(self, **overrides):
+        """ICI parameters (``repro.core.simxla.ICIParams``) derived from
+        the fabric/MPI sections — the analytic-network backend adapter."""
+        from .build import build_ici
+        return build_ici(self, **overrides)
+
     def topology(self):
         from .build import build_topology
         return build_topology(self.fabric, self.scale.n_nodes)

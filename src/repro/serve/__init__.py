@@ -1,6 +1,7 @@
 from .engine import ServeEngine, Request
 from .predict import (HPLPredictionService, PredictRequest,
-                      predict_top500)
+                      PredictionService, WorkloadRequest, predict_top500)
 
 __all__ = ["ServeEngine", "Request", "HPLPredictionService",
-           "PredictRequest", "predict_top500"]
+           "PredictRequest", "PredictionService", "WorkloadRequest",
+           "predict_top500"]

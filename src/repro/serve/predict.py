@@ -1,12 +1,18 @@
-"""Batch HPL-prediction service: simulation-as-a-service endpoint.
+"""Batch prediction services: simulation-as-a-service endpoints.
 
-Mirrors ``ServeEngine``'s slotted batching for the predictor side of the
-house: scenario requests (an ``HPLConfig`` plus a ``FastSimParams``
-what-if) queue up and ``flush`` drains them in micro-batches through
-``fastsim.sweep_hpl``.  A burst of thousands of requests costs a handful
-of compiles (shape-bucket LRU cache) and one vmapped dispatch per
-(bucket, wave) — the serving answer to the paper's 4.8-hour-per-scenario
-SystemC baseline.
+``PredictionService`` is the workload-generic front end: requests name a
+``(workload, platform)`` pair (registry names, specs, or instances) and
+``flush`` drains the queue in micro-batches, one batched sweep per
+workload family per wave (``FastModel.sweep_models``) — HPL requests
+share ``sweep_hpl`` programs, transformer requests share ``sweep_step``
+programs, and a mixed burst costs one dispatch per family.
+
+``HPLPredictionService`` is the original HPL-specialized endpoint, kept
+as the back-compat surface for cfg/params-level requests (an
+``HPLConfig`` plus a ``FastSimParams`` what-if).  A burst of thousands
+of requests costs a handful of compiles (shape-bucket LRU cache) and one
+vmapped dispatch per (bucket, wave) — the serving answer to the paper's
+4.8-hour-per-scenario SystemC baseline.
 
 Requests can name a registered platform instead of carrying explicit
 params: ``PredictRequest(rid=1, platform="frontera")`` serves that
@@ -14,17 +20,16 @@ machine's published HPL run from its spec (DES-calibrated fastsim
 params included), so the endpoint can predict any registry machine by
 name.
 
-``PredictRequest(..., breakdown=True)`` additionally runs a traced DES
-of the same scenario and attaches ``result["breakdown"]`` — per-phase
-times, compute/comm/idle fractions and the critical path (see
-``repro.trace``).  The DES costs real wall time per rank, so breakdown
-requests are capped at ``max_des_ranks`` (reject, don't stall, the
-batch endpoint).
+Both services accept ``breakdown=True``: a traced DES of the same
+scenario runs and ``result["breakdown"]`` carries per-phase times,
+compute/comm/idle fractions and the critical path (see ``repro.trace``).
+The DES costs real wall time per rank, so breakdown requests are capped
+at ``max_des_ranks`` (reject, don't stall, the batch endpoint).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Mapping, Optional, Sequence
+from typing import Any, Dict, List, Mapping, Optional, Sequence
 
 from repro.core.apps.hpl import HPLConfig
 from repro.core.fastsim import FastSimParams, sweep_hpl, trace_count
@@ -40,8 +45,126 @@ class PredictRequest:
     result: Optional[dict] = None
 
 
+@dataclasses.dataclass
+class WorkloadRequest:
+    """One (workload, platform) prediction request.  ``workload`` is a
+    registry kind name, a ``WorkloadSpec``, or a ``Workload`` instance;
+    ``platform`` a registry name or ``Platform`` spec; ``params`` are
+    workload-spec overrides applied at resolution time."""
+    rid: int
+    workload: Any = "hpl"
+    platform: Any = None
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    breakdown: bool = False              # attach a DES phase breakdown
+    result: Optional[dict] = None
+    _bound: Any = dataclasses.field(default=None, repr=False)
+    #        ^ (workload, platform, fastmodel), set by _resolve
+
+
+class PredictionService:
+    """Workload-generic micro-batching front end: routes ``(workload,
+    platform)`` requests through the workload registry and drains the
+    queue one batched sweep per workload family per wave."""
+
+    def __init__(self, max_batch: int = 256, max_des_ranks: int = 256):
+        self.max_batch = max_batch
+        self.max_des_ranks = max_des_ranks
+        self._queue: List[WorkloadRequest] = []
+        self.stats = {"requests": 0, "batches": 0, "scenarios": 0,
+                      "sweeps": 0, "des_breakdowns": 0}
+
+    def _resolve(self, req: WorkloadRequest) -> None:
+        """Bind names to specs and build the fast model; idempotent, and
+        every error surfaces here (before anything is enqueued)."""
+        if req._bound is not None:
+            return
+        from repro.workloads import (Workload, WorkloadSpec, get_workload,
+                                     workload_from_spec)
+        wl = req.workload
+        if isinstance(wl, str):
+            wl = get_workload(wl, **req.params)
+        elif isinstance(wl, WorkloadSpec):
+            wl = workload_from_spec(
+                wl.replace(**req.params) if req.params else wl)
+        elif isinstance(wl, Workload):
+            if req.params:
+                wl = workload_from_spec(wl.spec.replace(**req.params))
+        else:
+            raise ValueError(f"request {req.rid}: workload must be a kind "
+                             f"name, WorkloadSpec, or Workload, got "
+                             f"{type(wl).__name__}")
+        if req.platform is None:
+            raise ValueError(f"request {req.rid}: needs a platform")
+        plat = req.platform
+        if isinstance(plat, str):
+            from repro.platforms import get_platform
+            plat = get_platform(plat)
+        wl.validate(plat)
+        if req.breakdown and wl.des_ranks(plat) > self.max_des_ranks:
+            raise ValueError(
+                f"request {req.rid}: breakdown DES at "
+                f"{wl.des_ranks(plat)} ranks exceeds max_des_ranks="
+                f"{self.max_des_ranks}; pass a scaled-down scenario")
+        req._bound = (wl, plat, wl.fastsim_model(plat))
+
+    def submit(self, req: WorkloadRequest) -> None:
+        self._resolve(req)
+        self.stats["requests"] += 1
+        self._queue.append(req)
+
+    def flush(self) -> Dict[int, dict]:
+        """Drain the queue in waves of up to ``max_batch`` scenarios;
+        each wave groups requests by workload family and runs ONE
+        ``sweep_models`` dispatch per family.  Returns {rid: result}."""
+        results: Dict[int, dict] = {}
+        while self._queue:
+            wave = self._queue[:self.max_batch]
+            del self._queue[:self.max_batch]
+            by_family: Dict[type, List[WorkloadRequest]] = {}
+            for req in wave:
+                by_family.setdefault(type(req._bound[2]), []).append(req)
+            for model_cls, reqs in by_family.items():
+                res = model_cls.sweep_models([r._bound[2] for r in reqs])
+                self.stats["sweeps"] += 1
+                for req, out in zip(reqs, res):
+                    if req.breakdown:
+                        wl, plat, _ = req._bound
+                        out = dict(out)
+                        out["breakdown"] = wl.predict_des(
+                            plat, trace=True).get("breakdown")
+                        self.stats["des_breakdowns"] += 1
+                    req.result = out
+                    results[req.rid] = out
+            self.stats["batches"] += 1
+            self.stats["scenarios"] += len(wave)
+        return results
+
+    def predict_batch(self, requests: Sequence[WorkloadRequest]
+                      ) -> Dict[int, dict]:
+        """Submit + flush in one call, all-or-nothing on resolution: a
+        bad request (unknown workload or platform name) rejects the
+        whole call and leaves the queue untouched."""
+        requests = list(requests)
+        for req in requests:
+            self._resolve(req)
+        if not requests:
+            return {}
+        for req in requests:
+            self.submit(req)            # _resolve is idempotent
+        return self.flush()
+
+    def predict(self, workload, platform, **params) -> dict:
+        """Single-request convenience entry point."""
+        return self.predict_batch(
+            [WorkloadRequest(rid=0, workload=workload, platform=platform,
+                             params=params)])[0]
+
+
 class HPLPredictionService:
-    """Micro-batching front end over the batched sweep engine."""
+    """Micro-batching front end over the batched sweep engine — the
+    HPL-specialized back-compat surface (cfg/params-level requests);
+    new call sites should prefer the workload-generic
+    ``PredictionService``."""
 
     def __init__(self, max_batch: int = 256, max_des_ranks: int = 256):
         self.max_batch = max_batch

@@ -26,7 +26,9 @@ from .infer import (ACCEL_PEAKS, CPU_FAMILIES, CPUFamilyRule,
                     infer_platform, infer_platforms, memory_sized_n)
 from .fleet import (FleetEntry, FleetReport, FleetTuning, fleet_bucket,
                     predict_fleet, tune_scenario)
-from .calibrate import CalibrationResult, assign_splits, calibrate_fleet
+from .calibrate import (CalibrationResult, DESCalibration,
+                        assign_splits, calibrate_against_des,
+                        calibrate_fleet)
 
 __all__ = [
     "ROW_SCHEMA_VERSION", "ParseReport", "Top500Row", "load_sample",
@@ -36,5 +38,6 @@ __all__ = [
     "infer_platforms", "memory_sized_n",
     "FleetEntry", "FleetReport", "FleetTuning", "fleet_bucket",
     "predict_fleet", "tune_scenario",
-    "CalibrationResult", "assign_splits", "calibrate_fleet",
+    "CalibrationResult", "DESCalibration", "assign_splits",
+    "calibrate_against_des", "calibrate_fleet",
 ]

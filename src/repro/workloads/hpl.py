@@ -1,0 +1,72 @@
+"""HPL as a registered workload — the paper's application, extracted
+from the HPL-specific plumbing into the generic layer.
+
+The spec's params are the ``HPLConfig`` knobs; any of ``N``/``nb``/
+``P``/``Q`` left unset (or 0) falls back to the platform's published run
+geometry (``platform.hpl_config()``), so ``get_workload("hpl")`` with no
+arguments predicts every registry machine's own Rmax run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+from repro.core.apps.hpl import HPLConfig, HPLSim
+
+from .base import (FastModel, Workload, WorkloadSpec, register_workload)
+
+_CFG_KEYS = ("N", "nb", "P", "Q")
+
+
+@dataclasses.dataclass
+class HPLFastModel(FastModel):
+    """The batched HPL recurrence bound to one run geometry: ``params``
+    variants sweep as one compiled program (``fastsim.sweep_hpl``)."""
+    cfg: HPLConfig
+    params: object                     # FastSimParams
+
+    @classmethod
+    def sweep_models(cls, models: Sequence["HPLFastModel"]) -> List[dict]:
+        from repro.core.fastsim import sweep_hpl
+        return sweep_hpl([m.cfg for m in models], [m.params for m in models])
+
+
+@register_workload
+class HPLWorkload(Workload):
+    kind = "hpl"
+
+    def config(self, platform) -> HPLConfig:
+        """The scenario's ``HPLConfig`` on ``platform`` (spec overrides
+        win over the platform's published run geometry)."""
+        p = self.spec.params_dict
+        kw = {k: int(p[k]) for k in _CFG_KEYS if p.get(k)}
+        if p.get("bcast"):
+            kw["bcast"] = p["bcast"]
+        if "lookahead" in p:
+            kw["lookahead"] = int(p["lookahead"])
+        return platform.hpl_config(**kw)
+
+    def validate(self, platform) -> None:
+        cfg = self.config(platform)     # raises on missing defaults
+        if cfg.n_ranks > platform.scale.n_ranks:
+            raise ValueError(
+                f"hpl workload needs {cfg.n_ranks} ranks but platform "
+                f"{platform.name!r} has {platform.scale.n_ranks}")
+
+    def des_app(self, platform, *, trace: bool = False) -> HPLSim:
+        return HPLSim(self.config(platform), platform, trace=trace)
+
+    def des_ranks(self, platform) -> int:
+        return self.config(platform).n_ranks
+
+    def fastsim_model(self, platform) -> HPLFastModel:
+        return HPLFastModel(cfg=self.config(platform),
+                            params=platform.fastsim())
+
+    def predict_des(self, platform, *, trace: bool = False) -> dict:
+        res = self.des_app(platform, trace=trace).run()
+        out = {"time_s": res.time_s, "gflops": res.gflops,
+               "tflops": res.gflops / 1e3, "events": res.events}
+        if trace and res.trace is not None:
+            out["breakdown"] = res.trace.summary()
+        return out
