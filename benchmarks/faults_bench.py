@@ -1,0 +1,138 @@
+"""Fault-injection benchmarks: degraded-fleet sweep cost + hardened
+service latency under deadlines (DESIGN.md §16).
+
+Two claims kept honest here:
+
+  * a degraded-platform grid is an ordinary sweep axis — stragglers x
+    link-degradations on one HPL scenario cost ONE compile and
+    microseconds per lane (``sweep_faults``), not one DES run each;
+  * the hardened ``PredictionService`` keeps its tail latency bounded:
+    budgeted breakdown requests that would blow their deadline degrade
+    to the fastsim answer (stamped ``fallback_reason``) instead of
+    stalling the wave, so p99 stays near the fastsim cost.
+
+Standalone use writes the NDJSON trajectory file CI uploads::
+
+    PYTHONPATH=src python benchmarks/faults_bench.py --json \
+        --out BENCH_faults.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def _percentile(xs, p):
+    xs = sorted(xs)
+    i = min(len(xs) - 1, int(round(p / 100.0 * (len(xs) - 1))))
+    return xs[i]
+
+
+def run(quick: bool = True):
+    from repro.core.fastsim import trace_count
+    from repro.faults import FaultSpec
+    from repro.faults.fastsim import sweep_faults
+    from repro.platforms import get_platform
+    from repro.serve import PredictionService, WorkloadRequest
+    from repro.workloads import get_workload
+
+    rows = []
+
+    # ---------------------------------------- degraded-fleet fault grid
+    plat = get_platform("frontera")
+    wl = get_workload("hpl", N=32768 if quick else 65536, nb=128, P=2, Q=4)
+    stragglers = [1.25, 1.5, 2.0, 3.0] if quick else \
+        [1.1, 1.25, 1.5, 2.0, 3.0, 4.0, 6.0, 8.0]
+    link_degs = [0.75, 0.5, 0.25]
+    specs = ([FaultSpec.straggler(rank=1, slowdown=s) for s in stragglers]
+             + [FaultSpec.degraded_links(0.05, factor=f, seed=11)
+                for f in link_degs]
+             + [FaultSpec.straggler(rank=1, slowdown=s, seed=11)
+                + FaultSpec.degraded_links(0.05, factor=f, seed=11)
+                for s in stragglers for f in link_degs])
+    sweep_faults(wl, plat, specs)              # warm the bucket
+    t_warm = trace_count()
+    t0 = time.perf_counter()
+    out = sweep_faults(wl, plat, specs)
+    dt = time.perf_counter() - t0
+    worst = max(r["slowdown_vs_healthy"] for r in out)
+    rows.append({
+        "name": "faults.sweep_grid",
+        "us_per_call": dt / (len(specs) + 1) * 1e6,
+        "derived": f"n={len(specs) + 1};wall_ms={dt * 1e3:.1f};"
+                   f"retraces_after_warmup={trace_count() - t_warm};"
+                   f"worst_slowdown={worst:.2f}x"})
+
+    # --------------------------- service deadline/fallback tail latency
+    svc = PredictionService()
+    n_req = 8 if quick else 32
+    reqs = []
+    for i in range(n_req):
+        # even rids: DES breakdown fits the budget; odd rids: a budget
+        # the DES cannot meet -> fastsim fallback
+        reqs.append(WorkloadRequest(
+            rid=i, workload="transformer", platform="tpu-v5e-pod",
+            params={"mesh": [2, 4], "num_layers": 2},
+            breakdown=True,
+            timeout_s=(60.0 if i % 2 == 0 else 1e-6)))
+    lat = []
+    results = {}
+    for req in reqs:                    # per-request latency, not wave
+        t0 = time.perf_counter()
+        results.update(svc.predict_batch([req]))
+        lat.append(time.perf_counter() - t0)
+    fallbacks = sum(1 for r in results.values() if r.get("degraded"))
+    served = sum(1 for r in results.values() if "breakdown" in r)
+    assert fallbacks == n_req // 2 and served == n_req - fallbacks
+    rows.append({
+        "name": "serve.deadline_fallback",
+        "us_per_call": sum(lat) / len(lat) * 1e6,
+        "derived": f"n={n_req};fallbacks={fallbacks};"
+                   f"p50_ms={_percentile(lat, 50) * 1e3:.2f};"
+                   f"p99_ms={_percentile(lat, 99) * 1e3:.2f};"
+                   f"fallback_p99_ms="
+                   f"{_percentile(lat[1::2], 99) * 1e3:.2f}"})
+
+    # ------------------------------------ isolation overhead on a wave
+    svc2 = PredictionService()
+    hpl_kw = dict(N=32768 if quick else 65536, nb=128, P=2, Q=4)
+    wave = [WorkloadRequest(rid=i, workload="hpl", platform="frontera",
+                            params=dict(hpl_kw))
+            for i in range(n_req)]
+    wave[1] = WorkloadRequest(rid=1, workload="hpl", platform="nope")
+    t0 = time.perf_counter()
+    out2 = svc2.predict_batch(wave, isolate_errors=True)
+    dt = time.perf_counter() - t0
+    errs = sum(1 for r in out2.values() if r.get("status") == "error")
+    assert errs == 1 and len(out2) == n_req
+    rows.append({
+        "name": "serve.isolated_wave",
+        "us_per_call": dt / n_req * 1e6,
+        "derived": f"n={n_req};errors={errs};wall_ms={dt * 1e3:.1f};"
+                   f"queue_clean={not svc2._queue}"})
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", action="store_true")
+    ap.add_argument("--out", default=None,
+                    help="also write rows as NDJSON to this path")
+    args = ap.parse_args()
+    rows = run(quick=not args.full)
+    lines = [json.dumps(r) for r in rows]
+    if args.json:
+        print("\n".join(lines))
+    else:
+        print("name,us_per_call,derived")
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']:.2f},\"{r['derived']}\"")
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write("\n".join(lines) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,7 @@ MODULES = [
     "benchmarks.top500_fleet",          # TOP500 list fleet prediction
     "benchmarks.trace_breakdown",       # trace-derived comm/compute split
     "benchmarks.kernels_bench",         # Pallas kernels
+    "benchmarks.faults_bench",          # degraded fleet + hardened serve
 ]
 
 # --smoke: the fast subset CI runs on every push so benchmark entry
@@ -40,6 +41,7 @@ SMOKE_MODULES = [
     "benchmarks.train_step",
     "benchmarks.top500_fleet",
     "benchmarks.trace_breakdown",
+    "benchmarks.faults_bench",
 ]
 
 

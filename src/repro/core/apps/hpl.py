@@ -90,6 +90,8 @@ class HPLResult:
     events: int
     comm_time_est: float = 0.0
     trace: Optional[object] = None   # TraceRecorder when run with trace=True
+    failed: bool = False             # a fault stopped ranks from finishing
+    n_finished: int = -1             # ranks that completed (-1: all)
 
 
 class HPLRank:
@@ -107,6 +109,7 @@ class HPLRank:
         mpi = sim.mpi
         eng = sim.engine
         tr = eng.trace
+        fa = eng.faults
         blas = sim.blas[self.rank]
         P, Q, nb, N = cfg.P, cfg.Q, cfg.nb, cfg.N
         col_group = [self.q * P + pp for pp in range(P)]
@@ -130,6 +133,8 @@ class HPLRank:
                     t += blas.idamax(max(mloc - j, 1))
                     t += blas.dscal(max(mloc - j, 1))
                     t += blas.dger(max(mloc - j, 1), w - j - 1)
+                if fa.enabled:
+                    t *= fa.compute_scale(self.rank)
                 if tr.enabled:
                     tr.compute(self.rank, "panel_blas", t,
                                args={"panel": k, "w": w})
@@ -177,6 +182,8 @@ class HPLRank:
                                         tag=("swap", k, r))
                     yield ev
                 t = blas.dlaswp(w, max(nloc, 1))
+                if fa.enabled:
+                    t *= fa.compute_scale(self.rank)
                 if tr.enabled:
                     tr.compute(self.rank, "dlaswp", t, args={"panel": k})
                 yield t
@@ -188,11 +195,15 @@ class HPLRank:
             if nloc > 0:
                 ph0 = eng.now
                 t = blas.dtrsm(w, nloc)
+                if fa.enabled:
+                    t *= fa.compute_scale(self.rank)
                 if tr.enabled:
                     tr.compute(self.rank, "dtrsm", t, args={"panel": k})
                 yield t
                 if mloc > 0:
                     t = blas.dgemm(mloc, nloc, w)
+                    if fa.enabled:
+                        t *= fa.compute_scale(self.rank)
                     if tr.enabled:
                         tr.compute(self.rank, "dgemm", t,
                                    args={"panel": k, "m": mloc, "n": nloc})
@@ -244,7 +255,8 @@ class HPLSim:
     def __init__(self, cfg: HPLConfig, node, topology=None,
                  ranks_per_node: Optional[int] = None,
                  mpi_overhead: Optional[float] = None,
-                 trace: Optional[bool] = None):
+                 trace: Optional[bool] = None,
+                 faults=None):
         if topology is None and hasattr(node, "des"):   # a Platform spec
             platform = node
             stack = platform.des()
@@ -288,6 +300,11 @@ class HPLSim:
             cores=max(node.cores // ranks_per_node, 1))
         self.blas = [SimBLAS(share) for _ in range(cfg.n_ranks)]
         self.finish_times: Dict[int, float] = {}
+        if faults is not None:
+            from repro.faults.inject import install_faults
+            install_faults(faults, self.engine, network=self.net,
+                           n_ranks=cfg.n_ranks,
+                           rank_to_node=self.mpi.rank_to_node)
 
     @property
     def trace(self):
@@ -295,11 +312,22 @@ class HPLSim:
         return self.engine.trace
 
     def run(self) -> HPLResult:
+        fa = self.engine.faults
         for r in range(self.cfg.n_ranks):
-            self.engine.spawn(HPLRank(self, r).run(), name=f"rank{r}")
+            proc = self.engine.spawn(HPLRank(self, r).run(),
+                                     name=f"rank{r}")
+            if fa.enabled:
+                fa.register_rank(r, proc)
         self.engine.run_all()
+        fa.finalize()
+        trace = self.engine.trace if self.engine.trace.enabled else None
+        n_done = len(self.finish_times)
+        if n_done < self.cfg.n_ranks:
+            # a fail-stop stranded the survivors at a rendezvous: the
+            # heap drained without every rank finishing
+            return HPLResult(time_s=self.engine.now, gflops=0.0,
+                             events=self.engine.event_count, trace=trace,
+                             failed=True, n_finished=n_done)
         t = max(self.finish_times.values())
         return HPLResult(time_s=t, gflops=self.cfg.flops() / t / 1e9,
-                         events=self.engine.event_count,
-                         trace=self.engine.trace
-                         if self.engine.trace.enabled else None)
+                         events=self.engine.event_count, trace=trace)

@@ -77,7 +77,7 @@ class TransformerStepSim:
                  mpi_overhead: float = 5e-7,
                  straggler: Optional[Tuple[int, float]] = None,
                  jitter: float = 0.0, seed: int = 0,
-                 trace: bool = False):
+                 trace: bool = False, faults=None):
         self.workload = workload
         self.mesh = mesh
         self.pods = pods
@@ -104,6 +104,10 @@ class TransformerStepSim:
         self.jitter = jitter
         self.seed = seed
         self.finish: Dict[int, float] = {}
+        if faults is not None:
+            from repro.faults.inject import install_faults
+            install_faults(faults, self.engine, network=self.net,
+                           n_ranks=self.n)
 
     @classmethod
     def from_platform(cls, workload: StepWorkload, platform, *,
@@ -154,10 +158,15 @@ class TransformerStepSim:
 
     def _rank_proc(self, rank: int):
         tr = self.engine.trace
+        fa = self.engine.faults
         groups = self._groups(rank)
-        scale = self._compute_scale(rank)
+        base_scale = self._compute_scale(rank)
         for li, layer in enumerate(self.workload.layers):
             ph0 = self.engine.now
+            # fault scale is re-read per layer: stragglers can activate
+            # and clear mid-step
+            scale = base_scale * fa.compute_scale(rank) \
+                if fa.enabled else base_scale
             if tr.enabled:
                 tr.compute(rank, "layer_compute", layer.compute_s * scale,
                            args={"layer": li})
@@ -173,6 +182,8 @@ class TransformerStepSim:
                             args={"layer": li})
         ph0 = self.engine.now
         if self.workload.tail_compute_s:
+            scale = base_scale * fa.compute_scale(rank) \
+                if fa.enabled else base_scale
             if tr.enabled:
                 tr.compute(rank, "tail_compute",
                            self.workload.tail_compute_s * scale)
@@ -218,9 +229,20 @@ class TransformerStepSim:
         return self.engine.trace
 
     def run(self) -> Dict:
+        fa = self.engine.faults
         for r in range(self.n):
-            self.engine.spawn(self._rank_proc(r), name=f"chip{r}")
+            proc = self.engine.spawn(self._rank_proc(r), name=f"chip{r}")
+            if fa.enabled:
+                fa.register_rank(r, proc)
         self.engine.run_all()
+        fa.finalize()
+        if len(self.finish) < self.n:
+            # fail-stop stranded the survivors; report a failed step
+            return {"step_s": self.engine.now, "failed": True,
+                    "n_finished": len(self.finish),
+                    "events": self.engine.event_count,
+                    "min_finish": min(self.finish.values())
+                    if self.finish else 0.0}
         t = max(self.finish.values())
         return {"step_s": t, "events": self.engine.event_count,
                 "min_finish": min(self.finish.values())}

@@ -16,9 +16,28 @@ from __future__ import annotations
 
 import heapq
 import math
+import time
 from typing import Any, Callable, Generator, List, Optional
 
 from repro.trace.recorder import NULL_RECORDER, TraceRecorder
+
+
+class ProcessError(RuntimeError):
+    """An exception escaped a DES process generator.  Carries the
+    process identity and engine state at failure time so fault-run
+    failures are debuggable (the original exception is ``__cause__``)."""
+
+    def __init__(self, message: str, *, process: str = "", sim_time: float
+                 = 0.0, pending_events: int = 0):
+        super().__init__(message)
+        self.process = process
+        self.sim_time = sim_time
+        self.pending_events = pending_events
+
+
+class SimWallDeadline(RuntimeError):
+    """The engine's *wall-clock* budget expired mid-run (the serving
+    layer's per-request timeout; simulated time is unbounded)."""
 
 
 class Event:
@@ -45,15 +64,25 @@ class Event:
 
 
 class Process:
-    __slots__ = ("engine", "gen", "done", "_joiners", "name")
+    __slots__ = ("engine", "gen", "done", "_joiners", "name", "killed")
 
     def __init__(self, engine: "Engine", gen: Generator, name: str = ""):
         self.engine = engine
         self.gen = gen
         self.done = Event(engine)
         self.name = name
+        self.killed = False          # fail-stop: stop dead, never join
+
+    def kill(self):
+        """Fail-stop this virtual thread: it takes no further steps and
+        its ``done`` event never fires, so joiners and rendezvous peers
+        block forever — exactly a real fail-stop process."""
+        self.killed = True
+        self.gen.close()
 
     def _step(self, send_value: Any = None):
+        if self.killed:
+            return
         eng = self.engine
         try:
             while True:
@@ -81,6 +110,15 @@ class Process:
                 raise TypeError(f"bad yield {cmd!r} from {self.name}")
         except StopIteration:
             self.done.set()
+        except ProcessError:
+            raise
+        except Exception as exc:
+            raise ProcessError(
+                f"DES process {self.name or '<unnamed>'} failed at "
+                f"t={eng.now:.9g}s ({len(eng._heap)} pending events): "
+                f"{type(exc).__name__}: {exc}",
+                process=self.name, sim_time=eng.now,
+                pending_events=len(eng._heap)) from exc
 
 
 class Engine:
@@ -96,6 +134,19 @@ class Engine:
     cost one attribute test and the loop itself is untouched.  The
     recorder never schedules events, so traced and untraced runs of the
     same scenario produce bit-identical simulated times.
+
+    ``faults`` is the engine's fault clock — a
+    ``repro.faults.inject.FaultRuntime`` attached by the application
+    when a scenario carries a ``FaultSpec``, or the no-op NULL_FAULTS
+    singleton.  A runtime drives degradation through ordinary
+    ``call_at`` events (its schedule is finite by construction), so an
+    unfaulted run schedules nothing extra and stays bit-identical to
+    pre-fault builds.
+
+    ``wall_deadline`` (a ``time.monotonic`` timestamp) bounds *wall
+    clock*, not simulated time: the serving layer sets it so a DES that
+    would blow a request deadline raises ``SimWallDeadline`` instead of
+    stalling the wave.  Unset, the hot loop is untouched.
     """
 
     def __init__(self, trace: bool = False):
@@ -104,6 +155,9 @@ class Engine:
         self._seq = 0
         self.event_count = 0
         self.trace = TraceRecorder(self) if trace else NULL_RECORDER
+        from repro.faults.inject import NULL_FAULTS
+        self.faults = NULL_FAULTS
+        self.wall_deadline: Optional[float] = None
 
     def event(self) -> Event:
         return Event(self)
@@ -121,8 +175,17 @@ class Engine:
         self._schedule(0.0, proc._step, None)
         return proc
 
+    def set_wall_deadline(self, timeout_s: Optional[float]):
+        """Bound the *wall clock* a run may burn: ``run()`` raises
+        ``SimWallDeadline`` once ``timeout_s`` real seconds elapse.
+        None clears the bound."""
+        self.wall_deadline = (None if timeout_s is None
+                              else time.monotonic() + timeout_s)
+
     def run(self, until: float = math.inf) -> float:
         heap = self._heap
+        if self.wall_deadline is not None:
+            return self._run_deadline(until)
         while heap:
             t, _, fn, arg = heap[0]
             if t > until:
@@ -131,6 +194,28 @@ class Engine:
             self.now = t
             self.event_count += 1
             fn(arg)
+        return self.now
+
+    def _run_deadline(self, until: float) -> float:
+        # separate loop so the unfaulted hot path above stays untouched;
+        # the clock syscall is amortized over 1024-event slices
+        heap = self._heap
+        deadline = self.wall_deadline
+        while heap:
+            if time.monotonic() > deadline:
+                raise SimWallDeadline(
+                    f"wall-clock budget expired at sim t={self.now:.9g}s "
+                    f"({self.event_count} events, {len(heap)} pending)")
+            for _ in range(1024):
+                if not heap:
+                    break
+                t, _, fn, arg = heap[0]
+                if t > until:
+                    return self.now
+                heapq.heappop(heap)
+                self.now = t
+                self.event_count += 1
+                fn(arg)
         return self.now
 
     def run_all(self) -> float:

@@ -158,6 +158,18 @@ class Network:
         f.done.set()
 
     # -- public API -------------------------------------------------------
+    def set_capacity(self, link: Link, capacity: float):
+        """Change a link's capacity mid-run (the fault layer's
+        time-varying bandwidth hook).  Flows crossing the link get their
+        shares and completion predictions recomputed; with no flows the
+        update is free.  Capacity must stay > 0 — fail-stop is modeled
+        by killing processes, not by zero-bandwidth links."""
+        if capacity <= 0:
+            raise ValueError(f"link capacity must be > 0, got {capacity}")
+        link.capacity = capacity
+        if link.flows:
+            self._reallocate(list(link.flows))
+
     def send(self, src: int, dst: int, size: float) -> Event:
         """Start a flow; returns Event set at completion (after path latency
         + bandwidth-shared transfer)."""

@@ -32,6 +32,20 @@ class Topology:
         this with their structural count."""
         return len(getattr(self, "links", []))
 
+    def iter_links(self) -> List[Link]:
+        """Every link, in a deterministic structural order — the fault
+        layer's sampling universe (a seeded ``link_frac`` pick must hit
+        the same links run-to-run)."""
+        links = getattr(self, "links", None)
+        if links is None:
+            raise NotImplementedError(f"{type(self).__name__}.iter_links")
+        return list(links.values()) if isinstance(links, dict) \
+            else list(links)
+
+    def node_links(self, node: int) -> List[Link]:
+        """Links adjacent to ``node`` (for node-scoped link faults)."""
+        raise NotImplementedError(f"{type(self).__name__}.node_links")
+
 
 class FatTreeTwoLevel(Topology):
     """nodes -> edge switches -> core switches, D-mod-K up-routing.
@@ -76,6 +90,14 @@ class FatTreeTwoLevel(Topology):
     @property
     def n_links(self) -> int:
         return 2 * self.n_nodes + 2 * self.n_edge * self.n_core
+
+    def iter_links(self) -> List[Link]:
+        return (self.node_up + self.node_down
+                + [l for row in self.edge_up for l in row]
+                + [l for row in self.edge_down for l in row])
+
+    def node_links(self, node: int) -> List[Link]:
+        return [self.node_up[node], self.node_down[node]]
 
 
 def _registry_topology(platform_name: str, n_nodes: Optional[int] = None,
@@ -173,6 +195,13 @@ class Dragonfly(Topology):
     def n_links(self) -> int:
         return 2 * self.n_nodes + len(self.local) + len(self.glob)
 
+    def iter_links(self) -> List[Link]:
+        return (self.node_up + self.node_down + list(self.local.values())
+                + list(self.glob.values()))
+
+    def node_links(self, node: int) -> List[Link]:
+        return [self.node_up[node], self.node_down[node]]
+
 
 class Torus(Topology):
     """k-D torus with per-direction links — the TPU ICI fabric.
@@ -207,6 +236,9 @@ class Torus(Topology):
         for c, d in zip(coords, self.dims):
             n = n * d + c
         return n
+
+    def node_links(self, node: int) -> List[Link]:
+        return [l for (n, _, _), l in self.links.items() if n == node]
 
     def route(self, src: int, dst: int) -> List[Link]:
         if src == dst:
@@ -256,3 +288,13 @@ class MultiPod(Topology):
     @property
     def n_links(self) -> int:
         return sum(p.n_links for p in self.pods) + 2 * len(self.pods)
+
+    def iter_links(self) -> List[Link]:
+        out: List[Link] = []
+        for p in self.pods:
+            out.extend(p.iter_links())
+        return out + self.dcn_up + self.dcn_down
+
+    def node_links(self, node: int) -> List[Link]:
+        pod, local = node // self.pod_size, node % self.pod_size
+        return self.pods[pod].node_links(local)

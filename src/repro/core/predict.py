@@ -66,7 +66,7 @@ def predict_cell(arch: str, shape: str, mesh: str = "16x16",
 def predict_cell_des(arch: str, shape: str, mesh: str = "16x16",
                      straggler=None, jitter: float = 0.0,
                      dryrun_dir: Path = DRYRUN_DIR,
-                     platform="tpu-v5e-pod") -> Dict:
+                     platform="tpu-v5e-pod", faults=None) -> Dict:
     rec = load_record(arch, shape, mesh, dryrun_dir)
     cfg = get_config(arch)
     plat = _resolve_platform(platform)
@@ -77,7 +77,8 @@ def predict_cell_des(arch: str, shape: str, mesh: str = "16x16",
                              chip=plat.node_model(),
                              ici=ici_from_platform(plat),
                              mpi_overhead=plat.mpi.overhead,
-                             straggler=straggler, jitter=jitter)
+                             straggler=straggler, jitter=jitter,
+                             faults=faults)
     return sim.run()
 
 

@@ -56,10 +56,14 @@ class SimMPI:
         self.counters["p2p_msgs"] += 1
         self.counters["p2p_bytes"] += nbytes
         eng = self.engine
+        # fault hook: latency_jitter scales the per-message software
+        # overhead (one attribute test when no faults are installed)
+        overhead = self.overhead * eng.faults.latency_factor(src) \
+            if eng.faults.enabled else self.overhead
         eager = nbytes <= EAGER_LIMIT
         transfer_done = eng.event()
         if src == dst:
-            eng.call_at(eng.now + self.overhead,
+            eng.call_at(eng.now + overhead,
                         lambda _: transfer_done.set(), None)
             if eng.trace.enabled:
                 eng.trace.msg_post(src, dst, nbytes, tag, transfer_done)
@@ -71,7 +75,7 @@ class SimMPI:
             flow_done = self.net.send(self.rank_to_node(src),
                                       self.rank_to_node(dst), nbytes)
             flow_done.waiters.append(_Relay(transfer_done))
-        eng.call_at(eng.now + self.overhead + lat_extra, go, None)
+        eng.call_at(eng.now + overhead + lat_extra, go, None)
         if eng.trace.enabled:
             eng.trace.msg_post(src, dst, nbytes, tag, transfer_done)
 
@@ -83,7 +87,7 @@ class SimMPI:
             self._posted.setdefault(key, []).append(transfer_done)
         if eager:
             send_done = eng.event()
-            eng.call_at(eng.now + self.overhead,
+            eng.call_at(eng.now + overhead,
                         lambda _: send_done.set(), None)
             return send_done
         return transfer_done

@@ -1,5 +1,8 @@
-from .straggler import StepTimeMonitor, simulate_straggler_impact
-from .elastic import elastic_restart_plan
+from .straggler import (StepTimeMonitor, simulate_fault_impact,
+                        simulate_straggler_impact)
+from .elastic import (ElasticPlan, elastic_restart_plan,
+                      restart_plan_for_faults)
 
 __all__ = ["StepTimeMonitor", "simulate_straggler_impact",
-           "elastic_restart_plan"]
+           "simulate_fault_impact", "ElasticPlan",
+           "elastic_restart_plan", "restart_plan_for_faults"]

@@ -7,10 +7,14 @@ checkpoint-and-evict, re-shard data away from the slow host, or lower the
 synchronization frequency (gradient accumulation).
 
 The simulator closes the loop: ``simulate_straggler_impact`` replays the
-step on the DES with a slow chip injected (core/apps/transformer.py) and
-reports the predicted step-time blowup — the operator can decide whether
-eviction is worth a restart *before* touching the cluster (paper §V
-what-if methodology applied to fault tolerance).
+step on the DES with a slow chip injected — now expressed as a
+``repro.faults.FaultSpec`` scenario, so detection feeds the same
+declarative fault layer every backend understands — and reports the
+predicted step-time blowup; the operator can decide whether eviction is
+worth a restart *before* touching the cluster (paper §V what-if
+methodology applied to fault tolerance).  ``simulate_fault_impact`` is
+the workload-generic edition: any registered workload, any platform,
+any fault scenario, on either backend.
 """
 from __future__ import annotations
 
@@ -51,11 +55,52 @@ class StepTimeMonitor:
 
 def simulate_straggler_impact(arch: str, shape: str, mesh: str = "16x16",
                               slowdown: float = 3.0, chip: int = 0) -> Dict:
-    """Predicted step-time impact of one slow chip (DES what-if)."""
+    """Predicted step-time impact of one slow chip (DES what-if); a thin
+    consumer of the declarative fault layer."""
     from repro.core.predict import predict_cell_des
+    from repro.faults import FaultSpec
     base = predict_cell_des(arch, shape, mesh)
-    slow = predict_cell_des(arch, shape, mesh, straggler=(chip, slowdown))
+    slow = predict_cell_des(
+        arch, shape, mesh,
+        faults=FaultSpec.straggler(rank=chip, slowdown=slowdown))
     return {"baseline_s": base["step_s"], "straggler_s": slow["step_s"],
             "blowup": slow["step_s"] / max(base["step_s"], 1e-12),
             "verdict": ("evict" if slow["step_s"] > 1.3 * base["step_s"]
                         else "tolerate")}
+
+
+def simulate_fault_impact(workload, platform, faults, *,
+                          des: bool = False,
+                          evict_threshold: float = 1.3) -> Dict:
+    """Predicted impact of ANY fault scenario on any registered workload.
+
+    ``workload`` is a kind name or ``Workload`` instance, ``platform`` a
+    registry name or spec, ``faults`` anything ``as_fault_spec`` accepts.
+    ``des=False`` (default) compares fastsim predictions — one batched
+    dispatch, fine for straggler/bandwidth scenarios; ``des=True`` runs
+    both scenarios on the DES, which additionally covers fail-stop (the
+    faulted run reports ``failed=True`` and the verdict is ``restart``).
+    """
+    from repro.workloads import Workload, get_workload
+    wl = workload if isinstance(workload, Workload) else get_workload(workload)
+    if isinstance(platform, str):
+        from repro.platforms import get_platform
+        platform = get_platform(platform)
+    if des:
+        base = wl.predict_des(platform)
+        faulted = wl.predict_des(platform, faults=faults)
+    else:
+        base = wl.predict(platform)
+        faulted = wl.predict(platform, faults=faults)
+    out = {"baseline_s": base["time_s"], "faulted_s": faulted["time_s"],
+           "backend": "des" if des else "fastsim"}
+    if faulted.get("failed"):
+        out["failed"] = True
+        out["n_finished"] = faulted.get("n_finished")
+        out["blowup"] = float("inf")
+        out["verdict"] = "restart"
+    else:
+        out["blowup"] = faulted["time_s"] / max(base["time_s"], 1e-12)
+        out["verdict"] = ("evict" if out["blowup"] > evict_threshold
+                          else "tolerate")
+    return out

@@ -25,13 +25,37 @@ scenario runs and ``result["breakdown"]`` carries per-phase times,
 compute/comm/idle fractions and the critical path (see ``repro.trace``).
 The DES costs real wall time per rank, so breakdown requests are capped
 at ``max_des_ranks`` (reject, don't stall, the batch endpoint).
+
+Production hardening (all opt-in, so the strict all-or-nothing contract
+above is the default):
+
+  * ``WorkloadRequest.timeout_s`` sets a per-request wall-clock budget.
+    The deadline is stamped at submit time and propagated into the
+    breakdown DES (``Engine.set_wall_deadline``); a request whose DES
+    would blow the budget — or whose scenario exceeds the rank guard —
+    degrades gracefully to its fastsim-only answer, stamped with
+    ``fallback_reason`` and ``degraded=True`` instead of timing out (or
+    rejecting) the wave.
+  * transient backend errors (``RuntimeError``/``OSError`` from a sweep
+    dispatch) are retried with exponential backoff (``retries``,
+    ``backoff_s``); scenario errors (``ValueError``/``KeyError``) never
+    are.
+  * ``predict_batch(reqs, isolate_errors=True)`` captures per-request
+    resolution errors into ``{"status": "error", ...}`` response
+    entries instead of rejecting the wave; failed requests are never
+    enqueued, so an empty or all-failed wave leaves the queue clean.
+  * ``WorkloadRequest.faults`` runs the scenario on a degraded platform
+    (``repro.faults``): folded into the fast model's params and, for
+    breakdown requests, injected into the DES.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Mapping, Optional, Sequence
 
 from repro.core.apps.hpl import HPLConfig
+from repro.core.engine import SimWallDeadline
 from repro.core.fastsim import FastSimParams, sweep_hpl, trace_count
 
 
@@ -56,9 +80,13 @@ class WorkloadRequest:
     platform: Any = None
     params: Dict[str, Any] = dataclasses.field(default_factory=dict)
     breakdown: bool = False              # attach a DES phase breakdown
+    faults: Any = None                   # FaultSpec / dict / JSON scenario
+    timeout_s: Optional[float] = None    # wall budget; enables fallback
     result: Optional[dict] = None
     _bound: Any = dataclasses.field(default=None, repr=False)
     #        ^ (workload, platform, fastmodel), set by _resolve
+    _deadline: Optional[float] = dataclasses.field(default=None, repr=False)
+    _fallback: Optional[str] = dataclasses.field(default=None, repr=False)
 
 
 class PredictionService:
@@ -66,12 +94,20 @@ class PredictionService:
     platform)`` requests through the workload registry and drains the
     queue one batched sweep per workload family per wave."""
 
-    def __init__(self, max_batch: int = 256, max_des_ranks: int = 256):
+    #: exception types a sweep dispatch may raise transiently (backend
+    #: hiccups); scenario errors (ValueError/KeyError) are never retried
+    TRANSIENT = (RuntimeError, OSError)
+
+    def __init__(self, max_batch: int = 256, max_des_ranks: int = 256,
+                 retries: int = 2, backoff_s: float = 0.05):
         self.max_batch = max_batch
         self.max_des_ranks = max_des_ranks
+        self.retries = retries
+        self.backoff_s = backoff_s
         self._queue: List[WorkloadRequest] = []
         self.stats = {"requests": 0, "batches": 0, "scenarios": 0,
-                      "sweeps": 0, "des_breakdowns": 0}
+                      "sweeps": 0, "des_breakdowns": 0, "retries": 0,
+                      "fallbacks": 0, "errors": 0}
 
     def _resolve(self, req: WorkloadRequest) -> None:
         """Bind names to specs and build the fast model; idempotent, and
@@ -101,16 +137,66 @@ class PredictionService:
             plat = get_platform(plat)
         wl.validate(plat)
         if req.breakdown and wl.des_ranks(plat) > self.max_des_ranks:
-            raise ValueError(
-                f"request {req.rid}: breakdown DES at "
-                f"{wl.des_ranks(plat)} ranks exceeds max_des_ranks="
-                f"{self.max_des_ranks}; pass a scaled-down scenario")
-        req._bound = (wl, plat, wl.fastsim_model(plat))
+            if req.timeout_s is not None:
+                # budgeted request: degrade to fastsim, don't reject
+                req._fallback = (f"max_des_ranks: breakdown DES at "
+                                 f"{wl.des_ranks(plat)} ranks exceeds "
+                                 f"{self.max_des_ranks}")
+            else:
+                raise ValueError(
+                    f"request {req.rid}: breakdown DES at "
+                    f"{wl.des_ranks(plat)} ranks exceeds max_des_ranks="
+                    f"{self.max_des_ranks}; pass a scaled-down scenario")
+        req._bound = (wl, plat, wl.fastsim_model(plat, faults=req.faults))
 
     def submit(self, req: WorkloadRequest) -> None:
         self._resolve(req)
+        if req.timeout_s is not None and req._deadline is None:
+            req._deadline = time.monotonic() + req.timeout_s
         self.stats["requests"] += 1
         self._queue.append(req)
+
+    def _dispatch(self, model_cls, reqs: List[WorkloadRequest]) -> List[dict]:
+        """One batched sweep per family, with bounded retry + exponential
+        backoff for transient backend errors."""
+        models = [r._bound[2] for r in reqs]
+        delay = self.backoff_s
+        for attempt in range(self.retries + 1):
+            try:
+                return model_cls.sweep_models(models)
+            except self.TRANSIENT:
+                if attempt == self.retries:
+                    raise
+                self.stats["retries"] += 1
+                time.sleep(delay)
+                delay *= 2.0
+
+    def _attach_breakdown(self, req: WorkloadRequest, out: dict) -> None:
+        """Run the traced DES under the request's remaining wall budget;
+        on budget exhaustion the fastsim answer stands, stamped with the
+        fallback reason."""
+        wl, plat, _ = req._bound
+        budget = None
+        if req._deadline is not None:
+            budget = req._deadline - time.monotonic()
+            if budget <= 0.0:
+                self._degrade(out, "deadline_exceeded: wall budget spent "
+                                   "before the breakdown DES started")
+                return
+        try:
+            app = wl.des_app(plat, trace=True, faults=req.faults)
+            if budget is not None:
+                app.engine.set_wall_deadline(budget)
+            app.run()
+            out["breakdown"] = app.engine.trace.summary()
+            self.stats["des_breakdowns"] += 1
+        except SimWallDeadline as exc:
+            self._degrade(out, f"wall_deadline: {exc}")
+
+    def _degrade(self, out: dict, reason: str) -> None:
+        out["fallback_reason"] = reason
+        out["degraded"] = True
+        self.stats["fallbacks"] += 1
 
     def flush(self) -> Dict[int, dict]:
         """Drain the queue in waves of up to ``max_batch`` scenarios;
@@ -124,40 +210,67 @@ class PredictionService:
             for req in wave:
                 by_family.setdefault(type(req._bound[2]), []).append(req)
             for model_cls, reqs in by_family.items():
-                res = model_cls.sweep_models([r._bound[2] for r in reqs])
+                res = self._dispatch(model_cls, reqs)
                 self.stats["sweeps"] += 1
                 for req, out in zip(reqs, res):
-                    if req.breakdown:
-                        wl, plat, _ = req._bound
-                        out = dict(out)
-                        out["breakdown"] = wl.predict_des(
-                            plat, trace=True).get("breakdown")
-                        self.stats["des_breakdowns"] += 1
+                    out = dict(out)
+                    if req._fallback is not None:    # rank-guard degrade
+                        self._degrade(out, req._fallback)
+                    elif req.breakdown:
+                        self._attach_breakdown(req, out)
                     req.result = out
                     results[req.rid] = out
             self.stats["batches"] += 1
             self.stats["scenarios"] += len(wave)
         return results
 
-    def predict_batch(self, requests: Sequence[WorkloadRequest]
-                      ) -> Dict[int, dict]:
-        """Submit + flush in one call, all-or-nothing on resolution: a
-        bad request (unknown workload or platform name) rejects the
-        whole call and leaves the queue untouched."""
-        requests = list(requests)
-        for req in requests:
-            self._resolve(req)
-        if not requests:
-            return {}
-        for req in requests:
-            self.submit(req)            # _resolve is idempotent
-        return self.flush()
+    def predict_batch(self, requests: Sequence[WorkloadRequest], *,
+                      isolate_errors: bool = False) -> Dict[int, dict]:
+        """Submit + flush in one call.
 
-    def predict(self, workload, platform, **params) -> dict:
+        Default is all-or-nothing on resolution: a bad request (unknown
+        workload or platform name) rejects the whole call and leaves the
+        queue untouched.  With ``isolate_errors=True`` a bad request
+        instead yields a ``{"status": "error", "error": ...,
+        "error_type": ...}`` entry for its rid while the rest of the
+        wave is served normally; failed requests are never enqueued, so
+        an empty (or all-failed) wave leaves the queue clean."""
+        requests = list(requests)
+        if not isolate_errors:
+            for req in requests:
+                self._resolve(req)
+            if not requests:
+                return {}
+            for req in requests:
+                self.submit(req)        # _resolve is idempotent
+            return self.flush()
+        results: Dict[int, dict] = {}
+        good: List[WorkloadRequest] = []
+        for req in requests:
+            try:
+                self._resolve(req)
+                good.append(req)
+            except Exception as exc:
+                err = {"status": "error", "error": str(exc),
+                       "error_type": type(exc).__name__}
+                req.result = err
+                results[req.rid] = err
+                self.stats["errors"] += 1
+        for req in good:
+            self.submit(req)
+        if good:
+            for rid, out in self.flush().items():
+                out.setdefault("status", "ok")
+                results[rid] = out
+        return results
+
+    def predict(self, workload, platform, *, faults=None,
+                timeout_s=None, **params) -> dict:
         """Single-request convenience entry point."""
         return self.predict_batch(
             [WorkloadRequest(rid=0, workload=workload, platform=platform,
-                             params=params)])[0]
+                             params=params, faults=faults,
+                             timeout_s=timeout_s)])[0]
 
 
 class HPLPredictionService:

@@ -184,4 +184,7 @@ def summarize(trace) -> dict:
         "critical_path_s": cp.length_s,
         "critical_path_coverage": cp.coverage,
         "critical_path_by_cat": cp.by_cat,
+        "faults": [dict({"name": s.name, "t0": s.t0, "t1": s.t1},
+                        **(s.args or {}))
+                   for s in trace.spans if s.cat == "fault"],
     }

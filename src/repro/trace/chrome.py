@@ -34,13 +34,16 @@ def to_chrome_json(trace, path: Optional[str] = None) -> dict:
         "ph": "M", "ts": 0, "pid": _PID, "tid": 0,
         "name": "process_name", "args": {"name": "DES"},
     }]
-    ranks = sorted({s.rank for s in trace.spans}
-                   | {m.src for m in trace.msgs}
-                   | {m.dst for m in trace.msgs})
-    for r in ranks:
+    ranks = ({s.rank for s in trace.spans}
+             | {m.src for m in trace.msgs}
+             | {m.dst for m in trace.msgs})
+    ranks |= {r for r, _, _, _ in trace.instants}
+    for r in sorted(ranks):
+        # rank -1 is the fault timeline (repro.faults.inject.FAULT_TRACK)
         events.append({"ph": "M", "ts": 0, "pid": _PID, "tid": r,
                        "name": "thread_name",
-                       "args": {"name": f"rank {r}"}})
+                       "args": {"name": "faults" if r < 0
+                                else f"rank {r}"}})
         events.append({"ph": "M", "ts": 0, "pid": _PID, "tid": r,
                        "name": "thread_sort_index",
                        "args": {"sort_index": r}})

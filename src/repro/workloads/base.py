@@ -151,28 +151,38 @@ class Workload(abc.ABC):
         (capacity, fabric kind, missing defaults)."""
 
     @abc.abstractmethod
-    def des_app(self, platform, *, trace: bool = False):
+    def des_app(self, platform, *, trace: bool = False, faults=None):
         """The discrete-event application, built from the platform spec;
-        the returned object has ``.run()`` and (traced) ``.trace``."""
+        the returned object has ``.run()`` and (traced) ``.trace``.
+        ``faults`` is an optional ``repro.faults.FaultSpec`` (or dict /
+        JSON form) injected into the run — every fault kind is
+        supported on this path."""
 
     @abc.abstractmethod
-    def fastsim_model(self, platform) -> FastModel:
-        """The vectorized-simulator surface for this scenario."""
+    def fastsim_model(self, platform, *, faults=None) -> FastModel:
+        """The vectorized-simulator surface for this scenario.  A
+        ``faults`` scenario is folded into the traced params
+        (``repro.faults.fastsim.apply_faults``) — straggler/bandwidth
+        kinds only; fail-stop raises (DES-only)."""
 
     def des_ranks(self, platform) -> int:
         """How many DES ranks ``des_app`` would spawn (serving guard)."""
         raise NotImplementedError
 
     # ------------------------------------------------- conveniences
-    def predict(self, platform) -> dict:
-        """Fast prediction of this scenario on ``platform``."""
+    def predict(self, platform, *, faults=None) -> dict:
+        """Fast prediction of this scenario on ``platform``, optionally
+        under a degraded-platform ``faults`` scenario."""
         self.validate(platform)
-        return self.fastsim_model(platform).predict()
+        return self.fastsim_model(platform, faults=faults).predict()
 
     @abc.abstractmethod
-    def predict_des(self, platform, *, trace: bool = False) -> dict:
+    def predict_des(self, platform, *, trace: bool = False,
+                    faults=None) -> dict:
         """Full-DES prediction; with ``trace=True`` the result carries a
-        ``breakdown`` (per-phase trace summary)."""
+        ``breakdown`` (per-phase trace summary).  ``faults`` injects a
+        degraded-platform scenario (all kinds; fail-stop runs report
+        ``failed=True``)."""
 
     def __repr__(self) -> str:
         return f"{type(self).__name__}({self.spec.params_dict})"

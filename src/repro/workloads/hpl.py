@@ -53,20 +53,30 @@ class HPLWorkload(Workload):
                 f"hpl workload needs {cfg.n_ranks} ranks but platform "
                 f"{platform.name!r} has {platform.scale.n_ranks}")
 
-    def des_app(self, platform, *, trace: bool = False) -> HPLSim:
-        return HPLSim(self.config(platform), platform, trace=trace)
+    def des_app(self, platform, *, trace: bool = False,
+                faults=None) -> HPLSim:
+        return HPLSim(self.config(platform), platform, trace=trace,
+                      faults=faults)
 
     def des_ranks(self, platform) -> int:
         return self.config(platform).n_ranks
 
-    def fastsim_model(self, platform) -> HPLFastModel:
-        return HPLFastModel(cfg=self.config(platform),
-                            params=platform.fastsim())
+    def fastsim_model(self, platform, *, faults=None) -> HPLFastModel:
+        cfg = self.config(platform)
+        params = platform.fastsim()
+        if faults is not None:
+            from repro.faults.fastsim import apply_faults
+            params = apply_faults(params, faults, grid=(cfg.P, cfg.Q))
+        return HPLFastModel(cfg=cfg, params=params)
 
-    def predict_des(self, platform, *, trace: bool = False) -> dict:
-        res = self.des_app(platform, trace=trace).run()
+    def predict_des(self, platform, *, trace: bool = False,
+                    faults=None) -> dict:
+        res = self.des_app(platform, trace=trace, faults=faults).run()
         out = {"time_s": res.time_s, "gflops": res.gflops,
                "tflops": res.gflops / 1e3, "events": res.events}
+        if res.failed:
+            out["failed"] = True
+            out["n_finished"] = res.n_finished
         if trace and res.trace is not None:
             out["breakdown"] = res.trace.summary()
         return out

@@ -191,27 +191,36 @@ class TransformerWorkload(Workload):
             if d["coll_data"] > 0 else []
         return StepWorkload(layers=layers, tail_collectives=tail)
 
-    def des_app(self, platform, *, trace: bool = False,
+    def des_app(self, platform, *, trace: bool = False, faults=None,
                 **kw) -> TransformerStepSim:
         self.validate(platform)
         d = self._derive(platform)
         return TransformerStepSim.from_platform(
             self.step_workload(platform), platform,
-            mesh=d["mesh"], pods=d["pods"], trace=trace, **kw)
+            mesh=d["mesh"], pods=d["pods"], trace=trace, faults=faults,
+            **kw)
 
-    def fastsim_model(self, platform) -> StepFastModel:
+    def fastsim_model(self, platform, *, faults=None) -> StepFastModel:
         self.validate(platform)
         d = self._derive(platform)
-        return StepFastModel(params=d["params"],
+        params = d["params"]
+        if faults is not None:
+            from repro.faults.fastsim import apply_faults
+            params = apply_faults(params, faults)
+        return StepFastModel(params=params,
                              tokens_per_step=d["tokens_per_step"])
 
-    def predict_des(self, platform, *, trace: bool = False) -> dict:
-        app = self.des_app(platform, trace=trace)
+    def predict_des(self, platform, *, trace: bool = False,
+                    faults=None) -> dict:
+        app = self.des_app(platform, trace=trace, faults=faults)
         res = app.run()
         d = self._derive(platform)
         out = {"time_s": res["step_s"], "step_s": res["step_s"],
                "events": res["events"],
                "tokens_per_s": d["tokens_per_step"] / res["step_s"]}
+        if res.get("failed"):
+            out["failed"] = True
+            out["n_finished"] = res["n_finished"]
         if trace and app.trace.enabled:
             out["breakdown"] = app.trace.summary()
         return out

@@ -1,0 +1,48 @@
+"""Hypothesis property tests for the fault layer: any valid Fault/
+FaultSpec round-trips through JSON exactly (the seeded-random fallback
+in test_faults.py covers environments without hypothesis)."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.faults import Fault, FaultSpec
+
+SETTINGS = settings(max_examples=60, deadline=None)
+
+finite = dict(allow_nan=False, allow_infinity=False)
+
+
+@st.composite
+def faults(draw):
+    kind = draw(st.sampled_from(("straggler", "fail_stop", "link_degrade",
+                                 "link_flap", "latency_jitter")))
+    kw = dict(start=draw(st.floats(0, 1e3, **finite)),
+              duration=draw(st.floats(0, 1e3, **finite)))
+    if kind == "straggler":
+        kw.update(rank=draw(st.integers(0, 4095)),
+                  factor=draw(st.floats(1e-3, 64, **finite)))
+    elif kind == "fail_stop":
+        kw.update(rank=draw(st.integers(0, 4095)),
+                  node=draw(st.integers(-1, 255)))
+    elif kind in ("link_degrade", "link_flap"):
+        kw.update(link_frac=draw(st.floats(1e-6, 1.0, **finite)),
+                  factor=draw(st.floats(1e-6, 1.0, **finite)))
+        if kind == "link_flap":
+            kw.update(period=draw(st.floats(1e-6, 10, **finite)),
+                      duty=draw(st.floats(0.01, 0.99, **finite)),
+                      cycles=draw(st.integers(1, 100)))
+    else:
+        kw.update(sigma=draw(st.floats(0.01, 0.99, **finite)))
+    return Fault(kind, **kw)
+
+
+@SETTINGS
+@given(fs=st.lists(faults(), max_size=6), seed=st.integers(0, 2**31 - 1),
+       name=st.text(max_size=12))
+def test_fault_spec_json_roundtrip_property(fs, seed, name):
+    spec = FaultSpec(faults=tuple(fs), seed=seed, name=name)
+    assert FaultSpec.from_json(spec.to_json()) == spec
+    assert hash(FaultSpec.from_json(spec.to_json())) == hash(spec)
