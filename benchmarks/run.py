@@ -27,6 +27,7 @@ MODULES = [
     "benchmarks.trace_breakdown",       # trace-derived comm/compute split
     "benchmarks.kernels_bench",         # Pallas kernels
     "benchmarks.faults_bench",          # degraded fleet + hardened serve
+    "benchmarks.engine_bench",          # DES hot loop vs frozen legacy
 ]
 
 # --smoke: the fast subset CI runs on every push so benchmark entry
@@ -42,6 +43,7 @@ SMOKE_MODULES = [
     "benchmarks.top500_fleet",
     "benchmarks.trace_breakdown",
     "benchmarks.faults_bench",
+    "benchmarks.engine_bench",
 ]
 
 

@@ -1,0 +1,437 @@
+"""Frozen pre-rewrite DES loop — the golden reference.
+
+This is the per-event ``heapq``-of-tuples engine exactly as it stood
+before the hot-loop rewrite (DESIGN.md §17).  It exists for two
+reasons and must never be "improved":
+
+  * **equivalence testing** — the rewritten engine must produce the
+    *same event order and the same simulated times* as this loop on any
+    program (tests/test_engine_order.py runs randomized spawn/wait/
+    event/kill programs on both and diffs the sequences);
+  * **benchmarking** — ``benchmarks/engine_bench.py`` reports the
+    events/s ratio of the rewritten loop over this one (via
+    ``legacy_des()``), so the speedup claim is measured on every run
+    instead of asserted once.
+
+Alongside the engine, ``LegacySimMPI`` and ``LegacyNetwork`` freeze the
+pre-rewrite message layer (per-message closures, ``_Relay`` adapters,
+per-send route computation, no Event/Flow recycling), and
+``legacy_des()`` swaps the whole frozen stack into the app modules and
+disables the SimBLAS panel-factorization cache — so a legacy run pays
+the true pre-PR per-event cost, not a partially-optimized hybrid.
+``LegacyEngine.pooling = False`` additionally tells the shared app code
+(e.g. HPLSim's SimBLAS construction) to keep pre-rewrite behavior.
+Results (event order, times, traces) are identical either way — the
+frozen stack only changes speed.
+"""
+from __future__ import annotations
+
+import contextlib
+import heapq
+import math
+import time
+from typing import Any, Callable, Dict, Generator, List, Optional, Sequence
+
+from repro.core.engine import ProcessError, SimWallDeadline
+from repro.core.hardware.network import Flow, Network
+from repro.core.simmpi import RDV_HANDSHAKE, EAGER_LIMIT, SimMPI
+from repro.trace.recorder import NULL_RECORDER, TraceRecorder
+
+
+class LegacyEvent:
+    __slots__ = ("engine", "_set", "waiters", "payload")
+
+    def __init__(self, engine: "LegacyEngine"):
+        self.engine = engine
+        self._set = False
+        self.waiters: List["LegacyProcess"] = []
+        self.payload: Any = None
+
+    def set(self, payload: Any = None):
+        if self._set:
+            return
+        self._set = True
+        self.payload = payload
+        for proc in self.waiters:
+            self.engine._schedule(0.0, proc._step, payload)
+        self.waiters.clear()
+
+    @property
+    def is_set(self) -> bool:
+        return self._set
+
+    def _step(self, payload: Any = None):   # relay: see engine.Event._step
+        self.set(payload)
+
+
+class LegacyProcess:
+    __slots__ = ("engine", "gen", "done", "_joiners", "name", "killed")
+
+    def __init__(self, engine: "LegacyEngine", gen: Generator,
+                 name: str = ""):
+        self.engine = engine
+        self.gen = gen
+        self.done = LegacyEvent(engine)
+        self.name = name
+        self.killed = False
+
+    def kill(self):
+        self.killed = True
+        self.gen.close()
+
+    def _step(self, send_value: Any = None):
+        if self.killed:
+            return
+        eng = self.engine
+        try:
+            while True:
+                cmd = self.gen.send(send_value)
+                send_value = None
+                if isinstance(cmd, (int, float)):
+                    if cmd < 0:
+                        raise ValueError(f"negative wait {cmd} in {self.name}")
+                    eng._schedule(float(cmd), self._step, None)
+                    return
+                if isinstance(cmd, LegacyEvent):
+                    if cmd.is_set:
+                        send_value = cmd.payload
+                        continue
+                    cmd.waiters.append(self)
+                    return
+                if isinstance(cmd, LegacyProcess):
+                    if cmd.done.is_set:
+                        continue
+                    cmd.done.waiters.append(self)
+                    return
+                if isinstance(cmd, tuple) and cmd and cmd[0] == "spawn":
+                    eng.spawn(cmd[1])
+                    continue
+                raise TypeError(f"bad yield {cmd!r} from {self.name}")
+        except StopIteration:
+            self.done.set()
+        except ProcessError:
+            raise
+        except Exception as exc:
+            raise ProcessError(
+                f"DES process {self.name or '<unnamed>'} failed at "
+                f"t={eng.now:.9g}s ({len(eng._heap)} pending events): "
+                f"{type(exc).__name__}: {exc}",
+                process=self.name, sim_time=eng.now,
+                pending_events=len(eng._heap)) from exc
+
+
+class LegacyEngine:
+    """The pre-rewrite event loop: one ``(time, seq, fn, arg)`` tuple
+    heap-pushed per event.  API-compatible with ``Engine`` so the whole
+    application stack (SimMPI, Network, apps, faults, traces) runs on
+    it unchanged."""
+
+    pooling = False          # SimMPI/Network: no Event/Flow recycling
+
+    def __init__(self, trace: bool = False):
+        self.now = 0.0
+        self._heap: list = []
+        self._seq = 0
+        self.event_count = 0
+        self.trace = TraceRecorder(self) if trace else NULL_RECORDER
+        from repro.faults.inject import NULL_FAULTS
+        self.faults = NULL_FAULTS
+        self.wall_deadline: Optional[float] = None
+
+    def event(self) -> LegacyEvent:
+        return LegacyEvent(self)
+
+    def _recycle_event(self, ev) -> None:
+        """No-op: the legacy loop never pools events."""
+
+    def pending(self) -> int:
+        return len(self._heap)
+
+    def _schedule(self, dt: float, fn: Callable, arg: Any):
+        self._seq += 1
+        heapq.heappush(self._heap, (self.now + dt, self._seq, fn, arg))
+
+    def call_at(self, t: float, fn: Callable, arg: Any = None):
+        self._seq += 1
+        heapq.heappush(self._heap, (max(t, self.now), self._seq, fn, arg))
+
+    def spawn(self, gen: Generator, name: str = "") -> LegacyProcess:
+        proc = LegacyProcess(self, gen, name)
+        self._schedule(0.0, proc._step, None)
+        return proc
+
+    def set_wall_deadline(self, timeout_s: Optional[float]):
+        self.wall_deadline = (None if timeout_s is None
+                              else time.monotonic() + timeout_s)
+
+    def run(self, until: float = math.inf) -> float:
+        heap = self._heap
+        if self.wall_deadline is not None:
+            return self._run_deadline(until)
+        while heap:
+            t, _, fn, arg = heap[0]
+            if t > until:
+                break
+            heapq.heappop(heap)
+            self.now = t
+            self.event_count += 1
+            fn(arg)
+        return self.now
+
+    def _run_deadline(self, until: float) -> float:
+        heap = self._heap
+        deadline = self.wall_deadline
+        while heap:
+            if time.monotonic() > deadline:
+                raise SimWallDeadline(
+                    f"wall-clock budget expired at sim t={self.now:.9g}s "
+                    f"({self.event_count} events, {len(heap)} pending)")
+            for _ in range(1024):
+                if not heap:
+                    break
+                t, _, fn, arg = heap[0]
+                if t > until:
+                    return self.now
+                heapq.heappop(heap)
+                self.now = t
+                self.event_count += 1
+                fn(arg)
+        return self.now
+
+    def run_all(self) -> float:
+        return self.run(math.inf)
+
+
+class _Relay:
+    """Pre-rewrite adapter: lets a Network Event set another Event on
+    fire (the live stack appends the target event directly instead)."""
+    __slots__ = ("target",)
+
+    def __init__(self, target):
+        self.target = target
+
+    def _step(self, payload=None):
+        self.target.set(payload)
+
+
+class LegacySimMPI(SimMPI):
+    """SimMPI exactly as it stood before the hot-loop rewrite: one
+    closure + one ``_Relay`` allocated per message, bare matchbox
+    entries, no event recycling, and a wrapper generator frame around
+    every untraced collective.  Collectives are inherited — they were
+    not touched by the rewrite."""
+
+    def isend(self, src: int, dst: int, nbytes: float, tag=0):
+        # counter storage moved to attributes (SimMPI.counters is a
+        # read-only property now); cost is equivalent to the pre-PR
+        # dict increments
+        self._p2p_msgs += 1
+        self._p2p_bytes += nbytes
+        eng = self.engine
+        overhead = self.overhead * eng.faults.latency_factor(src) \
+            if eng.faults.enabled else self.overhead
+        eager = nbytes <= EAGER_LIMIT
+        transfer_done = eng.event()
+        if src == dst:
+            eng.call_at(eng.now + overhead,
+                        lambda _: transfer_done.set(), None)
+            if eng.trace.enabled:
+                eng.trace.msg_post(src, dst, nbytes, tag, transfer_done)
+            return transfer_done
+        lat_extra = 0.0 if eager \
+            else RDV_HANDSHAKE * self.net.topo.base_latency
+
+        def go(_):
+            flow_done = self.net.send(self.rank_to_node(src),
+                                      self.rank_to_node(dst), nbytes)
+            flow_done.waiters.append(_Relay(transfer_done))
+        eng.call_at(eng.now + overhead + lat_extra, go, None)
+        if eng.trace.enabled:
+            eng.trace.msg_post(src, dst, nbytes, tag, transfer_done)
+
+        key = (src, dst, tag)
+        waiters = self._recv_wait.get(key)
+        if waiters:
+            waiters.pop(0).set(transfer_done)
+        else:
+            self._posted.setdefault(key, []).append(transfer_done)
+        if eager:
+            send_done = eng.event()
+            eng.call_at(eng.now + overhead,
+                        lambda _: send_done.set(), None)
+            return send_done
+        return transfer_done
+
+    def recv(self, src: int, dst: int, tag=0):
+        tr = self.engine.trace
+        t0 = self.engine.now if tr.enabled else 0.0
+        key = (src, dst, tag)
+        box = self._posted.get(key)
+        if box:
+            transfer = box.pop(0)
+        else:
+            w = self.engine.event()
+            self._recv_wait.setdefault(key, []).append(w)
+            transfer = yield w
+        yield transfer
+        if tr.enabled:
+            tr.recv_done(dst, src, t0, transfer)
+
+    def _traced(self, name: str, rank: int, group: List[int],
+                nbytes: float, op_id, impl):
+        tr = self.engine.trace
+        if not tr.enabled:
+            yield from impl
+            return
+        tok = tr.coll_begin(rank, name, op_id, group, nbytes)
+        yield from impl
+        tr.coll_end(rank, tok)
+
+
+class LegacyNetwork(Network):
+    """Network exactly as it stood before the hot-loop rewrite: a route
+    computed per send, a closure per flow start, full progressive
+    filling even for singleton components, and no Flow recycling."""
+
+    def __init__(self, engine, topology, *, min_flow_time: float = 0.0):
+        self.engine = engine
+        self.topo = topology
+        self.flows: Dict[Flow, None] = {}
+        self.min_flow_time = min_flow_time
+
+    def _component(self, seeds: Sequence[Flow]) -> List[Flow]:
+        seen = set()
+        out: List[Flow] = []
+        stack = [f for f in seeds if f in self.flows]
+        seen.update(id(f) for f in stack)
+        seen_links: set = set()
+        while stack:
+            f = stack.pop()
+            out.append(f)
+            for l in f.links:
+                if id(l) in seen_links:
+                    continue
+                seen_links.add(id(l))
+                for g in l.flows:
+                    if id(g) not in seen:
+                        seen.add(id(g))
+                        stack.append(g)
+        return out
+
+    def _reallocate(self, seeds: Optional[Sequence[Flow]] = None):
+        now = self.engine.now
+        comp = self._component(seeds) if seeds is not None \
+            else list(self.flows)
+        for f in comp:
+            if f.rate > 0:
+                f.remaining -= f.rate * (now - f._last_t)
+                if f.remaining < 0:
+                    f.remaining = 0.0
+            f._last_t = now
+        links: Dict[int, List[Flow]] = {}
+        link_objs: Dict = {}
+        for f in comp:
+            f.rate = -1.0
+            for l in f.links:
+                links.setdefault(id(l), []).append(f)
+                link_objs[id(l)] = l
+        remaining_cap = {lid: link_objs[lid].capacity for lid in links}
+        unassigned = dict(links)
+        n_active = len(comp)
+        while n_active > 0:
+            best_lid, best_share = None, math.inf
+            for lid, fl in unassigned.items():
+                n = sum(1 for f in fl if f.rate < 0)
+                if n == 0:
+                    continue
+                share = remaining_cap[lid] / n
+                if share < best_share:
+                    best_share, best_lid = share, lid
+            if best_lid is None:
+                for f in comp:
+                    if f.rate < 0:
+                        f.rate = math.inf
+                        n_active -= 1
+                break
+            for f in unassigned[best_lid]:
+                if f.rate < 0:
+                    f.rate = best_share
+                    n_active -= 1
+                    for l in f.links:
+                        remaining_cap[id(l)] -= best_share
+            unassigned.pop(best_lid)
+        for f in comp:
+            f._version += 1
+            if f.rate <= 0:
+                continue
+            t_done = now + (f.remaining / f.rate if f.rate < math.inf else 0.0)
+            self.engine.call_at(t_done, self._maybe_complete,
+                                (f, f._version))
+
+    def _maybe_complete(self, arg):
+        f, version = arg
+        if f._version != version or f not in self.flows:
+            return
+        now = self.engine.now
+        f.remaining -= f.rate * (now - f._last_t)
+        f._last_t = now
+        if f.remaining > 1e-9 * max(f.size, 1.0):
+            return
+        self.flows.pop(f, None)
+        neighbors = [g for l in f.links for g in l.flows if g is not f]
+        for l in f.links:
+            l.flows.pop(f, None)
+        if neighbors:
+            self._reallocate(neighbors)
+        f.done.set()
+
+    def send(self, src: int, dst: int, size: float):
+        done = self.engine.event()
+        links = self.topo.route(src, dst)
+        latency = sum(l.latency for l in links) + self.topo.base_latency
+        if not links or size <= 0:
+            self.engine.call_at(self.engine.now + latency,
+                                lambda _: done.set(), None)
+            return done
+        f = Flow(size, links, done)
+
+        def start(_):
+            f._last_t = self.engine.now
+            self.flows[f] = None
+            for l in f.links:
+                l.flows[f] = None
+            self._reallocate([f])
+        self.engine.call_at(self.engine.now + latency, start, None)
+        return done
+
+
+@contextlib.contextmanager
+def legacy_des():
+    """Run the DES application stack on the frozen pre-rewrite stack.
+
+    Swaps ``LegacyEngine``, ``LegacySimMPI`` and ``LegacyNetwork`` into
+    the app modules (they construct these from module-level names) and
+    disables the SimBLAS panel-factorization cache, so runs inside the
+    context pay the true pre-PR per-event and per-call costs.
+    Test/bench instrumentation only — results are bit-identical to the
+    rewritten path by contract (asserted in tests/test_engine_order.py)."""
+    import repro.core.apps.hpl as hpl_mod
+    import repro.core.apps.transformer as tr_mod
+    import repro.core.simblas as simblas_mod
+
+    saved = (hpl_mod.Engine, tr_mod.Engine, simblas_mod.PANEL_CACHE,
+             hpl_mod.Network, tr_mod.Network, hpl_mod.SimMPI,
+             tr_mod.SimMPI)
+    hpl_mod.Engine = LegacyEngine
+    tr_mod.Engine = LegacyEngine
+    simblas_mod.PANEL_CACHE = False
+    hpl_mod.Network = LegacyNetwork
+    tr_mod.Network = LegacyNetwork
+    hpl_mod.SimMPI = LegacySimMPI
+    tr_mod.SimMPI = LegacySimMPI
+    try:
+        yield LegacyEngine
+    finally:
+        (hpl_mod.Engine, tr_mod.Engine, simblas_mod.PANEL_CACHE,
+         hpl_mod.Network, tr_mod.Network, hpl_mod.SimMPI,
+         tr_mod.SimMPI) = saved

@@ -92,6 +92,10 @@ class HPLResult:
     trace: Optional[object] = None   # TraceRecorder when run with trace=True
     failed: bool = False             # a fault stopped ranks from finishing
     n_finished: int = -1             # ranks that completed (-1: all)
+    # representative-region runs (repro.scale): only ``region_panels``
+    # panels were simulated exactly; the rest are extrapolated
+    region_approx: bool = False
+    region_panels: int = 0
 
 
 class HPLRank:
@@ -110,11 +114,16 @@ class HPLRank:
         eng = sim.engine
         tr = eng.trace
         fa = eng.faults
+        tren = tr.enabled          # static for the whole run
+        faen = fa.enabled
         blas = sim.blas[self.rank]
         P, Q, nb, N = cfg.P, cfg.Q, cfg.nb, cfg.N
         col_group = [self.q * P + pp for pp in range(P)]
         row_group = [qq * P + self.p for qq in range(Q)]
         n_panels = cfg.n_panels            # ceil: trailing partial panel
+        if sim.max_panels is not None:     # region truncation (scale/)
+            n_panels = min(n_panels, sim.max_panels)
+        marks = sim.panel_marks
 
         for k in range(n_panels):
             rem = N - k * nb
@@ -128,14 +137,10 @@ class HPLRank:
             if self.q == qk:
                 # --- 1. panel factorization --------------------------------
                 ph0 = eng.now
-                t = 0.0
-                for j in range(w):
-                    t += blas.idamax(max(mloc - j, 1))
-                    t += blas.dscal(max(mloc - j, 1))
-                    t += blas.dger(max(mloc - j, 1), w - j - 1)
-                if fa.enabled:
+                t = blas.panel_fact(mloc, w)
+                if faen:
                     t *= fa.compute_scale(self.rank)
-                if tr.enabled:
+                if tren:
                     tr.compute(self.rank, "panel_blas", t,
                                args={"panel": k, "w": w})
                 yield t
@@ -144,26 +149,26 @@ class HPLRank:
                 yield from mpi.barrier(self.rank, col_group, ("pf", k, self.q))
                 ar_lat = 2 * math.ceil(math.log2(max(P, 2))) \
                     * (sim.net.topo.base_latency + mpi.overhead)
-                if tr.enabled:
+                if tren:
                     tr.complete(self.rank, "comm", "pivot_allreduce",
                                 eng.now, t1=eng.now + w * ar_lat,
                                 args={"panel": k})
                 yield w * ar_lat
-                if tr.enabled:
+                if tren:
                     tr.complete(self.rank, "phase", "panel_fact", ph0,
                                 args={"panel": k})
                 # --- 2. broadcast along my row -----------------------------
                 if Q > 1:
                     ph0 = eng.now
                     yield from self._bcast_panel(row_group, qk, panel_bytes, k)
-                    if tr.enabled:
+                    if tren:
                         tr.complete(self.rank, "phase", "panel_bcast", ph0,
                                     args={"panel": k})
             else:
                 if Q > 1:
                     ph0 = eng.now
                     yield from self._bcast_panel(row_group, qk, panel_bytes, k)
-                    if tr.enabled:
+                    if tren:
                         tr.complete(self.rank, "phase", "panel_bcast", ph0,
                                     args={"panel": k})
 
@@ -182,12 +187,12 @@ class HPLRank:
                                         tag=("swap", k, r))
                     yield ev
                 t = blas.dlaswp(w, max(nloc, 1))
-                if fa.enabled:
+                if faen:
                     t *= fa.compute_scale(self.rank)
-                if tr.enabled:
+                if tren:
                     tr.compute(self.rank, "dlaswp", t, args={"panel": k})
                 yield t
-                if tr.enabled:
+                if tren:
                     tr.complete(self.rank, "phase", "row_swap", ph0,
                                 args={"panel": k})
 
@@ -195,22 +200,30 @@ class HPLRank:
             if nloc > 0:
                 ph0 = eng.now
                 t = blas.dtrsm(w, nloc)
-                if fa.enabled:
+                if faen:
                     t *= fa.compute_scale(self.rank)
-                if tr.enabled:
+                if tren:
                     tr.compute(self.rank, "dtrsm", t, args={"panel": k})
                 yield t
                 if mloc > 0:
                     t = blas.dgemm(mloc, nloc, w)
-                    if fa.enabled:
+                    if faen:
                         t *= fa.compute_scale(self.rank)
-                    if tr.enabled:
+                    if tren:
                         tr.compute(self.rank, "dgemm", t,
                                    args={"panel": k, "m": mloc, "n": nloc})
                     yield t
-                if tr.enabled:
+                if tren:
                     tr.complete(self.rank, "phase", "trailing_update", ph0,
                                 args={"panel": k})
+
+            if marks is not None:
+                # per-panel boundary time on this rank; the region layer
+                # fits its closed forms to the max over ranks (no events
+                # scheduled — ordering is untouched)
+                prev = marks.get(k, 0.0)
+                if eng.now > prev:
+                    marks[k] = eng.now
 
         sim.finish_times[self.rank] = sim.engine.now
 
@@ -256,7 +269,9 @@ class HPLSim:
                  ranks_per_node: Optional[int] = None,
                  mpi_overhead: Optional[float] = None,
                  trace: Optional[bool] = None,
-                 faults=None):
+                 faults=None,
+                 max_panels: Optional[int] = None,
+                 panel_marks: Optional[Dict[int, float]] = None):
         if topology is None and hasattr(node, "des"):   # a Platform spec
             platform = node
             stack = platform.des()
@@ -298,8 +313,20 @@ class HPLSim:
             node, peak_flops=node.peak_flops / ranks_per_node,
             mem_bw=node.mem_bw / ranks_per_node,
             cores=max(node.cores // ranks_per_node, 1))
-        self.blas = [SimBLAS(share) for _ in range(cfg.n_ranks)]
+        # every rank gets the same node share, and SimBLAS is a pure
+        # function of shapes — one instance serves all ranks and its
+        # panel_fact memo is shared across the whole grid (per-rank
+        # instances under the legacy bench engine, as pre-rewrite)
+        if self.engine.pooling:
+            shared_blas = SimBLAS(share)
+            self.blas = [shared_blas] * cfg.n_ranks
+        else:
+            self.blas = [SimBLAS(share) for _ in range(cfg.n_ranks)]
         self.finish_times: Dict[int, float] = {}
+        # region-simulation hooks (src/repro/scale/): truncate the run
+        # after max_panels panels and/or record per-panel boundary times
+        self.max_panels = max_panels
+        self.panel_marks = panel_marks
         if faults is not None:
             from repro.faults.inject import install_faults
             install_faults(faults, self.engine, network=self.net,

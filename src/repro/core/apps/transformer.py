@@ -77,7 +77,8 @@ class TransformerStepSim:
                  mpi_overhead: float = 5e-7,
                  straggler: Optional[Tuple[int, float]] = None,
                  jitter: float = 0.0, seed: int = 0,
-                 trace: bool = False, faults=None):
+                 trace: bool = False, faults=None,
+                 layer_marks: Optional[Dict[int, float]] = None):
         self.workload = workload
         self.mesh = mesh
         self.pods = pods
@@ -104,6 +105,9 @@ class TransformerStepSim:
         self.jitter = jitter
         self.seed = seed
         self.finish: Dict[int, float] = {}
+        # region-simulation hook (src/repro/scale/): record per-layer
+        # boundary times (max over ranks; no events scheduled)
+        self.layer_marks = layer_marks
         if faults is not None:
             from repro.faults.inject import install_faults
             install_faults(faults, self.engine, network=self.net,
@@ -159,67 +163,117 @@ class TransformerStepSim:
     def _rank_proc(self, rank: int):
         tr = self.engine.trace
         fa = self.engine.faults
+        tren = tr.enabled
+        faen = fa.enabled
         groups = self._groups(rank)
+        # per-axis ring geometry computed once per rank, not per
+        # collective call: (group, me, nxt, prv, prv_ring_index)
+        rings = {}
+        for axis, grp in groups.items():
+            n = len(grp)
+            me = grp.index(rank)
+            rings[axis] = (grp, me, grp[(me + 1) % n], grp[(me - 1) % n],
+                           (me - 1) % n)
         base_scale = self._compute_scale(rank)
+        marks = self.layer_marks
         for li, layer in enumerate(self.workload.layers):
             ph0 = self.engine.now
             # fault scale is re-read per layer: stragglers can activate
             # and clear mid-step
             scale = base_scale * fa.compute_scale(rank) \
-                if fa.enabled else base_scale
-            if tr.enabled:
+                if faen else base_scale
+            if tren:
                 tr.compute(rank, "layer_compute", layer.compute_s * scale,
                            args={"layer": li})
             yield layer.compute_s * scale
             for ci, (op, wire, axis) in enumerate(layer.collectives):
-                grp = groups[axis]
-                if len(grp) <= 1:
+                if len(groups[axis]) <= 1:
                     continue
-                yield from self._collective(rank, op, wire, grp,
+                yield from self._collective(rank, op, wire, rings[axis],
                                             op_id=("l", li, ci, axis))
-            if tr.enabled:
+            if tren:
                 tr.complete(rank, "phase", f"layer{li}", ph0,
                             args={"layer": li})
+            if marks is not None:
+                # per-layer boundary on this rank; the region layer
+                # replicates the steady-state delta of the max-over-ranks
+                # boundary times (ordering untouched: no events scheduled)
+                prev = marks.get(li, 0.0)
+                if self.engine.now > prev:
+                    marks[li] = self.engine.now
         ph0 = self.engine.now
         if self.workload.tail_compute_s:
             scale = base_scale * fa.compute_scale(rank) \
-                if fa.enabled else base_scale
-            if tr.enabled:
+                if faen else base_scale
+            if tren:
                 tr.compute(rank, "tail_compute",
                            self.workload.tail_compute_s * scale)
             yield self.workload.tail_compute_s * scale
         for ci, (op, wire, axis) in enumerate(self.workload.tail_collectives):
             grp = groups[axis]
             if len(grp) > 1:
-                yield from self._collective(rank, op, wire, grp,
+                yield from self._collective(rank, op, wire, rings[axis],
                                             op_id=("t", ci, axis))
             if axis == "data" and self.pods > 1:
-                pg = groups["pod"]
-                yield from self._collective(rank, op, wire / len(grp), pg,
-                                            op_id=("tp", ci))
-        if tr.enabled and self.engine.now > ph0:
+                yield from self._collective(rank, op, wire / len(grp),
+                                            rings["pod"], op_id=("tp", ci))
+        if tren and self.engine.now > ph0:
             tr.complete(rank, "phase", "tail", ph0)
         self.finish[rank] = self.engine.now
 
-    def _collective(self, rank, op, wire_bytes, group, op_id):
+    def _collective(self, rank, op, wire_bytes, ring, op_id):
         """Ring collectives as real flows; wire_bytes already follows the
-        hlo_parse ring convention (bytes through one device)."""
+        hlo_parse ring convention (bytes through one device).  ``ring``
+        is the precomputed (group, me, nxt, prv, prv_index) tuple from
+        _rank_proc — ring geometry is a pure function of (rank, axis)."""
         mpi = self.mpi
         tr = self.engine.trace
+        group, me, nxt, prv, prv_i = ring
         tok = tr.coll_begin(rank, op, op_id, group, wire_bytes) \
             if tr.enabled else None
         n = len(group)
-        rounds = {"all-reduce": 2 * (n - 1), "all-gather": n - 1,
-                  "reduce-scatter": n - 1, "all-to-all": n - 1,
-                  "collective-permute": 1}.get(op, n - 1)
+        if op == "all-reduce":
+            rounds = 2 * (n - 1)
+        elif op == "collective-permute":
+            rounds = 1
+        else:       # all-gather / reduce-scatter / all-to-all / default
+            rounds = n - 1
         per_round = wire_bytes / max(rounds, 1)
-        idx = {r: i for i, r in enumerate(group)}
-        me = idx[rank]
-        nxt, prv = group[(me + 1) % n], group[(me - 1) % n]
-        for k in range(rounds):
-            ev = mpi.isend(rank, nxt, per_round, tag=(op_id, k, me))
-            yield from mpi.recv(prv, rank, tag=(op_id, k, (me - 1) % n))
-            yield ev
+        isend = mpi.isend
+        eng = mpi.engine
+        if tok is None and eng.pooling:
+            # hot path: the blocking-recv body inlined (identical yield
+            # sequence to mpi.recv, minus one generator frame per round;
+            # traced and legacy runs keep the generator so span capture
+            # and the pre-PR cost model stay exact)
+            posted = mpi._posted
+            recv_wait = mpi._recv_wait
+            recycle = eng._recycle_event
+            for k in range(rounds):
+                ev = isend(rank, nxt, per_round, tag=(op_id, k, me))
+                key = (prv, rank, (op_id, k, prv_i))
+                box = posted.get(key)
+                if box:
+                    transfer, eager = box.pop(0)
+                else:
+                    w = eng.event()
+                    wl = recv_wait.get(key)
+                    if wl is None:
+                        recv_wait[key] = [w]
+                    else:
+                        wl.append(w)
+                    transfer, eager = yield w
+                    recycle(w)
+                yield transfer
+                if eager:
+                    recycle(transfer)
+                yield ev
+        else:
+            recv = mpi.recv
+            for k in range(rounds):
+                ev = isend(rank, nxt, per_round, tag=(op_id, k, me))
+                yield from recv(prv, rank, tag=(op_id, k, prv_i))
+                yield ev
         if tok is not None:
             tr.coll_end(rank, tok)
 

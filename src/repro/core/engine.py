@@ -11,6 +11,39 @@ generator ("CoFluent virtual thread").  Processes yield:
 The paper's "privatization of global variables" workaround (§III-C) is
 unnecessary here: each generator closes over its own state — documented in
 DESIGN.md §9.
+
+Hot-loop layout (DESIGN.md §17).  The queue is split by delay class:
+
+  * **same-timestamp FIFO** (``_nq_seq``/``_nq_fn``/``_nq_arg``) —
+    events scheduled at the current instant (``dt == 0``: event
+    wakeups, spawns, relays — the dominant class in collective-heavy
+    runs) append to three parallel flat arrays consumed through a head
+    cursor; they never touch the heap.  Parallel arrays instead of
+    ``(seq, fn, arg)`` tuples is a *gc* decision, not a style one: an
+    int/ref append creates no collector-tracked object, so the FIFO —
+    unlike a tuple queue, whose retained entries push the gen-0
+    counter over threshold every ~700 events — triggers no collections
+    at all, matching the pre-rewrite loop's gc-neutral behavior
+    (a tuple-queue variant measured 2x slower on zero-delay-heavy
+    runs, with 100% of the difference inside ``gc.collect``).  The
+    drained prefix is compacted every 8192 entries to bound memory.
+    Wakeups batch per timestamp and are FIFO-stable by construction
+    (satellite: the ``Event.set`` re-entrancy hazard).
+  * **timed heap** (``_heap``) — future events live in a binary heap
+    of ``(t, seq, fn, arg)`` tuples.  (A slot-reuse variant with
+    mutable entries and a free list was measured ~40% *slower* than
+    tuples — CPython's tuple free list beats manual recycling — so
+    reuse is confined to the FIFO, events, and flows, where it wins.)
+    ``seq`` is the monotonic insertion number: it tie-breaks equal
+    timestamps (comparison never reaches the callables) and is what
+    makes the FIFO/heap merge exact.
+
+The merge rule is the old loop's total order, verbatim: dispatch in
+``(time, seq)`` order, where FIFO entries carry ``t == now``.  The
+rewritten loop is therefore *bit-identical* — same event order, same
+finish times, same traces — to the frozen pre-rewrite loop kept in
+``_legacy_engine.py``, and tests/test_engine_order.py holds it to that
+on randomized programs.
 """
 from __future__ import annotations
 
@@ -41,6 +74,12 @@ class SimWallDeadline(RuntimeError):
 
 
 class Event:
+    # No cached bound method here: Events (and Processes) are *callable*
+    # and the FIFO/heap store the object itself as the dispatch target.
+    # An earlier variant cached ``self.step = self._step``, which is a
+    # reference cycle (event -> bound method -> event) — every
+    # non-recycled event became cyclic garbage only gc could free, and
+    # zero-delay-heavy runs spent ~40% of wall time in collections.
     __slots__ = ("engine", "_set", "waiters", "payload")
 
     def __init__(self, engine: "Engine"):
@@ -54,13 +93,36 @@ class Event:
             return
         self._set = True
         self.payload = payload
-        for proc in self.waiters:
-            self.engine._schedule(0.0, proc._step, payload)
-        self.waiters.clear()
+        waiters = self.waiters
+        if waiters:
+            # zero-delay wakeups go straight onto the same-timestamp
+            # FIFO in registration order (seq-numbered so the heap
+            # merge stays exact)
+            eng = self.engine
+            seqs = eng._nq_seq
+            fns = eng._nq_fn
+            args = eng._nq_arg
+            seq = eng._seq
+            for proc in waiters:
+                seq += 1
+                seqs.append(seq)
+                fns.append(proc)
+                args.append(payload)
+            eng._seq = seq
+            waiters.clear()
 
     @property
     def is_set(self) -> bool:
         return self._set
+
+    # an Event can sit directly in another event's waiters list and
+    # relay the fire (SimMPI chains flow-completion -> transfer events
+    # this way without a per-message adapter object); __call__ makes it
+    # a dispatch target for the FIFO/heap without a bound-method alloc
+    def _step(self, payload: Any = None):
+        self.set(payload)
+
+    __call__ = _step
 
 
 class Process:
@@ -84,14 +146,43 @@ class Process:
         if self.killed:
             return
         eng = self.engine
+        send = self.gen.send
         try:
             while True:
-                cmd = self.gen.send(send_value)
+                cmd = send(send_value)
                 send_value = None
+                # fast path: a bare float wait is the dominant yield
+                # (PR 3's trace-overhead mapping) — dispatch on exact
+                # type before the isinstance ladder
+                tc = type(cmd)
+                if tc is float:
+                    if cmd < 0.0:
+                        raise ValueError(f"negative wait {cmd} in {self.name}")
+                    # inlined _schedule: one fewer call per wait, the
+                    # single hottest line in the simulator
+                    seq = eng._seq + 1
+                    eng._seq = seq
+                    if cmd == 0.0:
+                        eng._nq_seq.append(seq)
+                        eng._nq_fn.append(self)
+                        eng._nq_arg.append(None)
+                    else:
+                        heapq.heappush(eng._heap,
+                                       (eng.now + cmd, seq, self, None))
+                    return
+                if tc is Event:
+                    if cmd._set:
+                        send_value = cmd.payload
+                        continue
+                    cmd.waiters.append(self)
+                    return
+                # slow ladder, semantics identical to the legacy loop:
+                # ints / numpy scalars / bools, Event subclasses, joins,
+                # spawn tuples
                 if isinstance(cmd, (int, float)):
                     if cmd < 0:
                         raise ValueError(f"negative wait {cmd} in {self.name}")
-                    eng._schedule(float(cmd), self._step, None)
+                    eng._schedule(float(cmd), self, None)
                     return
                 if isinstance(cmd, Event):
                     if cmd.is_set:
@@ -115,19 +206,28 @@ class Process:
         except Exception as exc:
             raise ProcessError(
                 f"DES process {self.name or '<unnamed>'} failed at "
-                f"t={eng.now:.9g}s ({len(eng._heap)} pending events): "
+                f"t={eng.now:.9g}s ({eng.pending()} pending events): "
                 f"{type(exc).__name__}: {exc}",
                 process=self.name, sim_time=eng.now,
-                pending_events=len(eng._heap)) from exc
+                pending_events=eng.pending()) from exc
+
+    __call__ = _step
 
 
 class Engine:
-    """Event loop.  Heap entries are ``(time, seq, fn, arg)``: ``seq`` is
-    a monotonically increasing insertion number, so same-timestamp ties
-    always fire in schedule order — event ordering (and therefore traces
-    and results) is reproducible run-to-run.  Anything feeding the heap
+    """Event loop.  Two queues (see module docstring): a FIFO for
+    same-timestamp events and an array-backed slot-reuse heap for timed
+    ones, merged in exact ``(time, seq)`` order so event ordering (and
+    therefore traces and results) is reproducible run-to-run and
+    bit-identical to the pre-rewrite loop.  Anything feeding the queues
     must iterate its own state deterministically too (see the ordered
     flow dicts in hardware/network.py).
+
+    ``pooling`` marks this engine as supporting object recycling:
+    SimMPI recycles its receive-wait events through ``_recycle_event``
+    and Network recycles ``Flow`` objects when it is set (the legacy
+    engine sets it False so benchmarks can reproduce pre-rewrite
+    allocation behavior).
 
     ``trace=True`` attaches a ``repro.trace.TraceRecorder``; off, the
     no-op NULL_RECORDER singleton sits there so instrumentation sites
@@ -149,10 +249,19 @@ class Engine:
     stalling the wave.  Unset, the hot loop is untouched.
     """
 
+    pooling = True
+
     def __init__(self, trace: bool = False):
         self.now = 0.0
-        self._heap: list = []
+        self._heap: list = []        # (t, seq, fn, arg) tuples, heap order
+        # same-instant FIFO as parallel arrays (gc-neutral; see module
+        # docstring), consumed through the shared head cursor
+        self._nq_seq: list = []
+        self._nq_fn: list = []
+        self._nq_arg: list = []
+        self._nowq_head = 0
         self._seq = 0
+        self._event_pool: list = []
         self.event_count = 0
         self.trace = TraceRecorder(self) if trace else NULL_RECORDER
         from repro.faults.inject import NULL_FAULTS
@@ -160,19 +269,53 @@ class Engine:
         self.wall_deadline: Optional[float] = None
 
     def event(self) -> Event:
+        pool = self._event_pool
+        if pool:
+            return pool.pop()
         return Event(self)
 
+    def _recycle_event(self, ev: Event) -> None:
+        """Return an event to the pool.  Caller must guarantee no live
+        references remain (SimMPI's receive-wait events qualify: they
+        never escape the recv generator that made them)."""
+        ev._set = False
+        ev.payload = None
+        # waiters is already empty after set(); a killed waiter path
+        # never recycles, so no defensive clear needed — but it's cheap
+        ev.waiters.clear()
+        self._event_pool.append(ev)
+
+    def pending(self) -> int:
+        """Events scheduled but not yet dispatched (both queues)."""
+        return len(self._heap) + len(self._nq_seq) - self._nowq_head
+
+    def queue_depth(self) -> int:
+        """Alias for ``pending()`` — the bench's peak-depth probe."""
+        return self.pending()
+
     def _schedule(self, dt: float, fn: Callable, arg: Any):
-        self._seq += 1
-        heapq.heappush(self._heap, (self.now + dt, self._seq, fn, arg))
+        seq = self._seq + 1
+        self._seq = seq
+        if dt == 0.0:
+            self._nq_seq.append(seq)
+            self._nq_fn.append(fn)
+            self._nq_arg.append(arg)
+        else:
+            heapq.heappush(self._heap, (self.now + dt, seq, fn, arg))
 
     def call_at(self, t: float, fn: Callable, arg: Any = None):
-        self._seq += 1
-        heapq.heappush(self._heap, (max(t, self.now), self._seq, fn, arg))
+        seq = self._seq + 1
+        self._seq = seq
+        if t <= self.now:            # legacy max(t, now) clamp -> FIFO
+            self._nq_seq.append(seq)
+            self._nq_fn.append(fn)
+            self._nq_arg.append(arg)
+        else:
+            heapq.heappush(self._heap, (t, seq, fn, arg))
 
     def spawn(self, gen: Generator, name: str = "") -> Process:
         proc = Process(self, gen, name)
-        self._schedule(0.0, proc._step, None)
+        self._schedule(0.0, proc, None)
         return proc
 
     def set_wall_deadline(self, timeout_s: Optional[float]):
@@ -183,40 +326,126 @@ class Engine:
                               else time.monotonic() + timeout_s)
 
     def run(self, until: float = math.inf) -> float:
-        heap = self._heap
         if self.wall_deadline is not None:
             return self._run_deadline(until)
-        while heap:
-            t, _, fn, arg = heap[0]
-            if t > until:
-                break
-            heapq.heappop(heap)
-            self.now = t
-            self.event_count += 1
-            fn(arg)
+        heap = self._heap
+        seqs = self._nq_seq
+        fns = self._nq_fn
+        args = self._nq_arg
+        pop = heapq.heappop
+        head = self._nowq_head
+        count = self.event_count
+        now = self.now
+        try:
+            while True:
+                if head < len(seqs):
+                    # same-timestamp batch: drain FIFO entries at t ==
+                    # now, yielding to the heap only when its top is an
+                    # older (smaller-seq) event at the same instant
+                    if now > until:
+                        break
+                    if heap:
+                        s = heap[0]
+                        if s[0] == now and s[1] < seqs[head]:
+                            pop(heap)
+                            count += 1
+                            s[2](s[3])
+                            continue
+                    fn = fns[head]
+                    arg = args[head]
+                    head += 1
+                    if head >= 8192:
+                        # compact the drained prefix so long
+                        # same-timestamp cascades don't grow the arrays
+                        # (and pin payload refs) without bound
+                        del seqs[:head]
+                        del fns[:head]
+                        del args[:head]
+                        head = 0
+                    count += 1
+                    fn(arg)
+                    continue
+                if head:
+                    seqs.clear()
+                    fns.clear()
+                    args.clear()
+                    head = 0
+                if not heap:
+                    break
+                s = heap[0]
+                t = s[0]
+                if t > until:
+                    break
+                pop(heap)
+                self.now = now = t
+                count += 1
+                s[2](s[3])
+        finally:
+            self.event_count = count
+            self._nowq_head = head
         return self.now
 
     def _run_deadline(self, until: float) -> float:
-        # separate loop so the unfaulted hot path above stays untouched;
-        # the clock syscall is amortized over 1024-event slices
+        # separate loop so the unbudgeted hot path above stays
+        # untouched; the clock syscall is amortized over 1024-event
+        # slices.  Dispatch logic mirrors run() exactly (equivalence is
+        # asserted under deadline in tests/test_engine_order.py).
         heap = self._heap
+        seqs = self._nq_seq
+        fns = self._nq_fn
+        args = self._nq_arg
+        pop = heapq.heappop
         deadline = self.wall_deadline
-        while heap:
+        while True:
             if time.monotonic() > deadline:
                 raise SimWallDeadline(
                     f"wall-clock budget expired at sim t={self.now:.9g}s "
-                    f"({self.event_count} events, {len(heap)} pending)")
-            for _ in range(1024):
-                if not heap:
-                    break
-                t, _, fn, arg = heap[0]
-                if t > until:
-                    return self.now
-                heapq.heappop(heap)
-                self.now = t
-                self.event_count += 1
-                fn(arg)
-        return self.now
+                    f"({self.event_count} events, {self.pending()} pending)")
+            head = self._nowq_head
+            count = self.event_count
+            budget = 1024
+            try:
+                while budget:
+                    budget -= 1
+                    if head < len(seqs):
+                        if self.now > until:
+                            return self.now
+                        if heap:
+                            s = heap[0]
+                            if s[0] == self.now and s[1] < seqs[head]:
+                                pop(heap)
+                                count += 1
+                                s[2](s[3])
+                                continue
+                        fn = fns[head]
+                        arg = args[head]
+                        head += 1
+                        if head >= 8192:
+                            del seqs[:head]   # see run(): bound retention
+                            del fns[:head]
+                            del args[:head]
+                            head = 0
+                        count += 1
+                        fn(arg)
+                        continue
+                    if head:
+                        seqs.clear()
+                        fns.clear()
+                        args.clear()
+                        head = 0
+                    if not heap:
+                        return self.now
+                    s = heap[0]
+                    t = s[0]
+                    if t > until:
+                        return self.now
+                    pop(heap)
+                    self.now = t
+                    count += 1
+                    s[2](s[3])
+            finally:
+                self.event_count = count
+                self._nowq_head = head
 
     def run_all(self) -> float:
         return self.run(math.inf)

@@ -17,6 +17,13 @@ from typing import Optional
 
 from .hardware.node import NodeModel
 
+# Memoize whole panel-factorization accumulations (see ``panel_fact``).
+# Values are bit-identical either way — the cached number is the same
+# float the loop would produce — so this is purely a speed knob;
+# ``repro.core._legacy_engine.legacy_des()`` clears it to reproduce the
+# pre-rewrite per-call cost for benchmarking.
+PANEL_CACHE = True
+
 
 @dataclasses.dataclass
 class BlasCounters:
@@ -40,6 +47,7 @@ class SimBLAS:
         self.theta_mem = theta_mem if theta_mem is not None \
             else min(self.theta, 2e-6)
         self.counters = BlasCounters()
+        self._panel_cache: dict = {}
 
     # -- helpers ----------------------------------------------------------
     def _compute(self, ops: float) -> float:
@@ -90,6 +98,33 @@ class SimBLAS:
 
     def idamax(self, n: int) -> float:
         return self._memory(8.0 * n)
+
+    # -- fused HPL panel factorization (paper §III-C inner loop) ------------
+    def panel_fact(self, mloc: int, w: int) -> float:
+        """Total BLAS time of one HPL panel factorization: per column j,
+        idamax + dscal over the remaining rows and a rank-1 dger update.
+
+        The accumulation order is exactly the unfused per-column loop, so
+        the value is bit-identical to calling the three kernels w times —
+        which is what lets the result be memoized per (mloc, w) shape
+        (shapes repeat across process rows and panels).  When cached, the
+        call counters reflect only the first computation of each shape.
+        """
+        if PANEL_CACHE:
+            t = self._panel_cache.get((mloc, w))
+            if t is not None:
+                return t
+        t = 0.0
+        for j in range(w):
+            mj = mloc - j
+            if mj < 1:
+                mj = 1
+            t += self.idamax(mj)
+            t += self.dscal(mj)
+            t += self.dger(mj, w - j - 1)
+        if PANEL_CACHE:
+            self._panel_cache[(mloc, w)] = t
+        return t
 
     # -- HPL auxiliary kernels (paper §III-C: HPL_dlaswp*) ------------------
     def dlaswp(self, rows: int, cols: int) -> float:

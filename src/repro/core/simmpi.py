@@ -45,7 +45,21 @@ class SimMPI:
         self._posted: Dict[Tuple[int, int, object], List[Event]] = {}
         self._recv_wait: Dict[Tuple[int, int, object], List[Event]] = {}
         self._coll_state: Dict = {}
-        self.counters = {"p2p_msgs": 0, "p2p_bytes": 0.0, "colls": 0}
+        # rank -> node resolved once (the mapping is static by design);
+        # isend is the hottest caller and skips the per-message calls
+        self._node_of = [self.rank_to_node(r) for r in range(n_ranks)]
+        # rendezvous handshake latency is a topology constant
+        self._rdv_extra = RDV_HANDSHAKE * network.topo.base_latency
+        self._p2p_msgs = 0
+        self._p2p_bytes = 0.0
+        self._colls = 0
+
+    @property
+    def counters(self) -> Dict:
+        """Op counters as a dict (kept as plain attributes internally —
+        attribute increments beat dict lookups in the isend hot path)."""
+        return {"p2p_msgs": self._p2p_msgs, "p2p_bytes": self._p2p_bytes,
+                "colls": self._colls}
 
     # ---------------------------------------------------------------- p2p
     def isend(self, src: int, dst: int, nbytes: float, tag=0) -> Event:
@@ -53,9 +67,10 @@ class SimMPI:
         eager messages complete for the sender once buffered (overhead);
         rendezvous messages complete when the transfer finishes.  The
         receiver always waits for the transfer (see recv)."""
-        self.counters["p2p_msgs"] += 1
-        self.counters["p2p_bytes"] += nbytes
+        self._p2p_msgs += 1
+        self._p2p_bytes += nbytes
         eng = self.engine
+        tren = eng.trace.enabled
         # fault hook: latency_jitter scales the per-message software
         # overhead (one attribute test when no faults are installed)
         overhead = self.overhead * eng.faults.latency_factor(src) \
@@ -63,34 +78,42 @@ class SimMPI:
         eager = nbytes <= EAGER_LIMIT
         transfer_done = eng.event()
         if src == dst:
-            eng.call_at(eng.now + overhead,
-                        lambda _: transfer_done.set(), None)
-            if eng.trace.enabled:
+            # schedule the bound set method — same dispatch, no
+            # per-message closure allocation
+            eng.call_at(eng.now + overhead, transfer_done.set, None)
+            if tren:
                 eng.trace.msg_post(src, dst, nbytes, tag, transfer_done)
             return transfer_done
-        lat_extra = 0.0 if eager \
-            else RDV_HANDSHAKE * self.net.topo.base_latency
-
-        def go(_):
-            flow_done = self.net.send(self.rank_to_node(src),
-                                      self.rank_to_node(dst), nbytes)
-            flow_done.waiters.append(_Relay(transfer_done))
-        eng.call_at(eng.now + overhead + lat_extra, go, None)
-        if eng.trace.enabled:
+        lat_extra = 0.0 if eager else self._rdv_extra
+        node_of = self._node_of
+        eng.call_at(eng.now + overhead + lat_extra, self._isend_go,
+                    (node_of[src], node_of[dst], nbytes, transfer_done))
+        if tren:
             eng.trace.msg_post(src, dst, nbytes, tag, transfer_done)
 
+        # the matchbox entry carries the eager flag so recv knows the
+        # sender kept no reference (eager senders get send_done instead)
+        # and the transfer event can be recycled after delivery
         key = (src, dst, tag)
+        entry = (transfer_done, eager)
         waiters = self._recv_wait.get(key)
         if waiters:
-            waiters.pop(0).set(transfer_done)
+            waiters.pop(0).set(entry)
         else:
-            self._posted.setdefault(key, []).append(transfer_done)
+            self._posted.setdefault(key, []).append(entry)
         if eager:
             send_done = eng.event()
-            eng.call_at(eng.now + overhead,
-                        lambda _: send_done.set(), None)
+            eng.call_at(eng.now + overhead, send_done.set, None)
             return send_done
         return transfer_done
+
+    def _isend_go(self, arg):
+        """Deferred flow launch (fires after software overhead [+ rdv
+        handshake]); the transfer event rides the flow-done event's
+        waiters list directly — no per-message adapter."""
+        src_node, dst_node, nbytes, transfer_done = arg
+        flow_done = self.net.send(src_node, dst_node, nbytes)
+        flow_done.waiters.append(transfer_done)
 
     def send(self, src: int, dst: int, nbytes: float, tag=0):
         """Generator: blocking send."""
@@ -100,19 +123,30 @@ class SimMPI:
     def recv(self, src: int, dst: int, tag=0):
         """Generator: blocking receive — waits for the matching send's
         transfer to complete."""
-        tr = self.engine.trace
-        t0 = self.engine.now if tr.enabled else 0.0
+        eng = self.engine
+        tr = eng.trace
+        t0 = eng.now if tr.enabled else 0.0
         key = (src, dst, tag)
         box = self._posted.get(key)
         if box:
-            transfer = box.pop(0)
+            transfer, eager = box.pop(0)
         else:
-            w = self.engine.event()
+            w = eng.event()
             self._recv_wait.setdefault(key, []).append(w)
-            transfer = yield w
+            transfer, eager = yield w
+            # w never escapes this generator (isend pops it from the
+            # wait list before setting it), so it can go back to the
+            # engine's event pool once we have resumed
+            if eng.pooling:
+                eng._recycle_event(w)
         yield transfer
         if tr.enabled:
             tr.recv_done(dst, src, t0, transfer)
+        elif eager and eng.pooling:
+            # eager transfers are invisible to the sender (it holds
+            # send_done) and the recorder is off, so after delivery the
+            # transfer event has no remaining references
+            eng._recycle_event(transfer)
 
     def sendrecv(self, me: int, peer: int, nbytes: float, tag=0):
         ev = self.isend(me, peer, nbytes, tag)
@@ -126,11 +160,15 @@ class SimMPI:
     # cross-match).
     def _traced(self, name: str, rank: int, group: List[int], nbytes: float,
                 op_id, impl):
-        """Wrap a collective generator in a per-rank trace span."""
+        """Wrap a collective generator in a per-rank trace span; with
+        tracing off the impl generator is returned bare (no wrapper
+        frame on the resume path — yields are identical either way)."""
         tr = self.engine.trace
         if not tr.enabled:
-            yield from impl
-            return
+            return impl
+        return self._traced_span(name, rank, group, nbytes, op_id, impl, tr)
+
+    def _traced_span(self, name, rank, group, nbytes, op_id, impl, tr):
         tok = tr.coll_begin(rank, name, op_id, group, nbytes)
         yield from impl
         tr.coll_end(rank, tok)
@@ -167,7 +205,7 @@ class SimMPI:
                     nbytes: float, op_id):
         """Binomial tree for small msgs; scatter+ring-allgather for large
         (OpenMPI/van-de-Geijn switch at 512 KiB)."""
-        self.counters["colls"] += 1
+        self._colls += 1
         n = len(group)
         if n <= 1:
             return
@@ -209,7 +247,7 @@ class SimMPI:
                         op_id):
         """Recursive doubling (small) / Rabenseifner reduce-scatter+allgather
         (large, switch 64 KiB)."""
-        self.counters["colls"] += 1
+        self._colls += 1
         n = len(group)
         if n <= 1:
             return
@@ -279,7 +317,7 @@ class SimMPI:
         and receive from (me-k) mod n, which covers every ordered pair for
         any group size (an XOR pairing silently skips rounds whenever
         me ^ k falls outside a non-power-of-two group)."""
-        self.counters["colls"] += 1
+        self._colls += 1
         n = len(group)
         idx = {r: i for i, r in enumerate(group)}
         me = idx[rank]
@@ -289,14 +327,3 @@ class SimMPI:
             ev = self.isend(rank, dst, nbytes_per_pair, tag=(op_id, k))
             yield from self.recv(src, rank, tag=(op_id, k))
             yield ev
-
-
-class _Relay:
-    """Adapter: lets a Network Event set another Event on fire."""
-    __slots__ = ("target",)
-
-    def __init__(self, target: Event):
-        self.target = target
-
-    def _step(self, payload=None):
-        self.target.set(payload)

@@ -47,12 +47,15 @@ class BridgeFit:
 
 
 def des_probe_runs(platform: Platform,
-                   probe_configs: Optional[Sequence] = None,
-                   ) -> List[Tuple[object, float]]:
+                   probe_configs: Optional[Sequence] = None, *,
+                   regions=None) -> List[Tuple[object, float]]:
     """Run the DES on small probe configs; returns (cfg, seconds) pairs.
 
     Probes use ``lookahead=0`` (the DES models the non-overlapped
-    schedule) and are clipped to the platform's rank capacity.
+    schedule) and are clipped to the platform's rank capacity.  With
+    ``regions`` set (an int or ``repro.scale.RegionSpec``) each probe is
+    a representative-region run — only the region's panels are simulated
+    exactly — which is what makes 10^4+-rank probes affordable.
     """
     from repro.core.apps.hpl import HPLConfig, HPLSim
 
@@ -66,7 +69,11 @@ def des_probe_runs(platform: Platform,
                          "fits its rank capacity")
     runs = []
     for cfg in probe_configs:
-        res = HPLSim(cfg, platform).run()
+        if regions is None:
+            res = HPLSim(cfg, platform).run()
+        else:
+            from repro.scale import RegionHPLSim
+            res = RegionHPLSim(cfg, platform, region=regions).run()
         runs.append((cfg, res.time_s))
     return runs
 
@@ -74,17 +81,22 @@ def des_probe_runs(platform: Platform,
 def fit_fastsim_to_des(platform: Platform,
                        probe_configs: Optional[Sequence] = None,
                        fields: Sequence[str] = DEFAULT_FIT_FIELDS,
-                       steps: int = 60, lr: float = 0.1) -> BridgeFit:
+                       steps: int = 60, lr: float = 0.1,
+                       regions=None) -> BridgeFit:
     """Gradient-fit fastsim's contention scales to DES probe runs.
 
     Returns a BridgeFit whose ``platform`` carries the fitted values in
     its calibration table — ``platform.fastsim()`` is then
     DES-consistent at probe scale while the compute side of the spec
-    stays untouched (only ``fields`` move).
+    stays untouched (only ``fields`` move).  ``regions`` switches the
+    probes to representative-region runs (``repro.scale``), unlocking
+    probe grids at 10^4+ ranks; per-scale fits should go through
+    ``repro.scale.fit_contention_at_scale``, which stores the result in
+    the spec's ``contention`` table instead of the global calibration.
     """
     from repro.core.calibrate import fit_fastsim_params
 
-    runs = des_probe_runs(platform, probe_configs)
+    runs = des_probe_runs(platform, probe_configs, regions=regions)
     init = dataclasses.replace(platform.fastsim(calibrated=False),
                                lookahead=0.0)
     fit = fit_fastsim_params(runs, init, fields=tuple(fields),

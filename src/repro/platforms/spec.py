@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 from typing import Any, Dict, Optional, Tuple
 
 FABRIC_KINDS = ("fat-tree", "dragonfly", "torus", "multipod")
@@ -133,6 +134,11 @@ class Platform:
     scale: ScaleSpec = ScaleSpec(n_nodes=1)
     # DES-fitted FastSimParams overrides, e.g. (("bcast_bw_scale", 0.9),)
     calibration: Tuple[Tuple[str, float], ...] = ()
+    # per-scale contention overrides fitted from region-DES probes
+    # (repro.scale): ((ranks, (("bcast_bw_scale", 0.8), ...)), ...);
+    # ``fastsim(at_ranks=...)`` applies the nearest (log-space) entry on
+    # top of ``calibration``
+    contention: Tuple[Tuple[int, Tuple[Tuple[str, float], ...]], ...] = ()
     # inference audit trail for generated specs (top500 ingestion): each
     # entry is a (key, value) string pair, e.g. ("cpu_family", "xeon-avx512")
     # or ("peak_source", "rpeak-rescaled"); empty for hand-written specs
@@ -147,11 +153,29 @@ class Platform:
         from .build import build_des
         return build_des(self, trace=trace)
 
-    def fastsim(self, *, calibrated: bool = True):
+    def fastsim(self, *, calibrated: bool = True,
+                at_ranks: Optional[int] = None):
         """Build FastSimParams (with ``calibration`` overrides applied
-        unless ``calibrated=False``)."""
+        unless ``calibrated=False``).  ``at_ranks`` additionally applies
+        the nearest per-scale ``contention`` entry (log-space distance),
+        so predictions at 10^4 ranks use scales fitted at 10^4 ranks."""
         from .build import build_fastsim
-        return build_fastsim(self, calibrated=calibrated)
+        params = build_fastsim(self, calibrated=calibrated)
+        if at_ranks is not None and calibrated:
+            over = self.contention_for(at_ranks)
+            if over:
+                params = dataclasses.replace(params, **over)
+        return params
+
+    def contention_for(self, at_ranks: int) -> Dict[str, float]:
+        """The contention entry nearest ``at_ranks`` in log-space
+        ({} when the table is empty)."""
+        if not self.contention or at_ranks < 1:
+            return {}
+        ranks, over = min(
+            self.contention,
+            key=lambda e: abs(math.log(max(e[0], 1)) - math.log(at_ranks)))
+        return dict(over)
 
     def node_model(self):
         from .build import build_node
@@ -200,12 +224,36 @@ class Platform:
         return dataclasses.replace(
             self, calibration=tuple(sorted(merged.items())))
 
+    @property
+    def contention_dict(self) -> Dict[int, Dict[str, float]]:
+        return {r: dict(over) for r, over in self.contention}
+
+    def with_contention(self, at_ranks: int, overrides: Dict[str, float],
+                        note: str = "") -> "Platform":
+        """A copy with ``overrides`` merged into the per-scale contention
+        entry for ``at_ranks``; a non-empty ``note`` records the fit's
+        provenance (region geometry, probe count) under
+        ``contention@<ranks>``."""
+        at_ranks = int(at_ranks)
+        table = self.contention_dict
+        entry = table.setdefault(at_ranks, {})
+        entry.update(overrides)
+        cont = tuple(sorted(
+            (r, tuple(sorted(over.items()))) for r, over in table.items()))
+        prov = self.provenance
+        if note:
+            key = f"contention@{at_ranks}"
+            prov = tuple(kv for kv in prov if kv[0] != key) + ((key, note),)
+        return dataclasses.replace(self, contention=cont, provenance=prov)
+
     # -------------------------------------------------- serialization
     def to_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
         d["fabric"]["dims"] = list(self.fabric.dims)
         d["scale"]["grid"] = list(self.scale.grid)
         d["calibration"] = [list(kv) for kv in self.calibration]
+        d["contention"] = [[r, [list(kv) for kv in over]]
+                           for r, over in self.contention]
         d["provenance"] = [list(kv) for kv in self.provenance]
         return d
 
@@ -225,6 +273,9 @@ class Platform:
                    scale=ScaleSpec(**sc),
                    calibration=tuple((k, float(v))
                                      for k, v in d.get("calibration", [])),
+                   contention=tuple(
+                       (int(r), tuple((k, float(v)) for k, v in over))
+                       for r, over in d.get("contention", [])),
                    provenance=tuple((k, str(v))
                                     for k, v in d.get("provenance", [])),
                    notes=d.get("notes", ""))

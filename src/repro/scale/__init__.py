@@ -1,0 +1,13 @@
+"""Representative-region simulation and per-scale calibration
+(DESIGN.md §17): exact DES on one region of the iteration space,
+closed-form replication of the rest, and contention scales fitted *at*
+the rank count they will be used at."""
+from .contention import (ScaleFit, contention_drift, fit_contention_at_scale,
+                         scaled_probe_configs, square_grid)
+from .region import (RegionHPLSim, RegionSpec, RegionStepSim, as_region)
+
+__all__ = [
+    "RegionSpec", "as_region", "RegionHPLSim", "RegionStepSim",
+    "ScaleFit", "fit_contention_at_scale", "contention_drift",
+    "scaled_probe_configs", "square_grid",
+]

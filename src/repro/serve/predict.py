@@ -24,7 +24,12 @@ Both services accept ``breakdown=True``: a traced DES of the same
 scenario runs and ``result["breakdown"]`` carries per-phase times,
 compute/comm/idle fractions and the critical path (see ``repro.trace``).
 The DES costs real wall time per rank, so breakdown requests are capped
-at ``max_des_ranks`` (reject, don't stall, the batch endpoint).
+at ``max_des_ranks`` (reject, don't stall, the batch endpoint) — 1024
+since the engine hot-loop rewrite.  ``WorkloadRequest.regions`` runs the
+breakdown DES as a representative-region simulation (``repro.scale``):
+only one region of the iteration space is simulated exactly, so the
+guard rises to ``max_region_ranks`` and the result is stamped
+``region_approx=True``.
 
 Production hardening (all opt-in, so the strict all-or-nothing contract
 above is the default):
@@ -81,6 +86,10 @@ class WorkloadRequest:
     params: Dict[str, Any] = dataclasses.field(default_factory=dict)
     breakdown: bool = False              # attach a DES phase breakdown
     faults: Any = None                   # FaultSpec / dict / JSON scenario
+    regions: Any = None                  # int / RegionSpec: breakdown DES
+    #        runs as a representative region (repro.scale), guarded by
+    #        max_region_ranks instead of max_des_ranks and stamped
+    #        region_approx=True
     timeout_s: Optional[float] = None    # wall budget; enables fallback
     result: Optional[dict] = None
     _bound: Any = dataclasses.field(default=None, repr=False)
@@ -98,10 +107,12 @@ class PredictionService:
     #: hiccups); scenario errors (ValueError/KeyError) are never retried
     TRANSIENT = (RuntimeError, OSError)
 
-    def __init__(self, max_batch: int = 256, max_des_ranks: int = 256,
+    def __init__(self, max_batch: int = 256, max_des_ranks: int = 1024,
+                 max_region_ranks: int = 16384,
                  retries: int = 2, backoff_s: float = 0.05):
         self.max_batch = max_batch
         self.max_des_ranks = max_des_ranks
+        self.max_region_ranks = max_region_ranks
         self.retries = retries
         self.backoff_s = backoff_s
         self._queue: List[WorkloadRequest] = []
@@ -136,17 +147,25 @@ class PredictionService:
             from repro.platforms import get_platform
             plat = get_platform(plat)
         wl.validate(plat)
-        if req.breakdown and wl.des_ranks(plat) > self.max_des_ranks:
-            if req.timeout_s is not None:
-                # budgeted request: degrade to fastsim, don't reject
-                req._fallback = (f"max_des_ranks: breakdown DES at "
-                                 f"{wl.des_ranks(plat)} ranks exceeds "
-                                 f"{self.max_des_ranks}")
-            else:
-                raise ValueError(
-                    f"request {req.rid}: breakdown DES at "
-                    f"{wl.des_ranks(plat)} ranks exceeds max_des_ranks="
-                    f"{self.max_des_ranks}; pass a scaled-down scenario")
+        if req.breakdown:
+            # region requests simulate only a representative slice of the
+            # iteration space, so they get the (much higher) region guard
+            guard, name = ((self.max_region_ranks, "max_region_ranks")
+                           if req.regions is not None
+                           else (self.max_des_ranks, "max_des_ranks"))
+            if wl.des_ranks(plat) > guard:
+                if req.timeout_s is not None:
+                    # budgeted request: degrade to fastsim, don't reject
+                    req._fallback = (f"{name}: breakdown DES at "
+                                     f"{wl.des_ranks(plat)} ranks exceeds "
+                                     f"{guard}")
+                else:
+                    raise ValueError(
+                        f"request {req.rid}: breakdown DES at "
+                        f"{wl.des_ranks(plat)} ranks exceeds {name}="
+                        f"{guard}; pass a scaled-down scenario"
+                        + ("" if req.regions is not None else
+                           " or a regions= request"))
         req._bound = (wl, plat, wl.fastsim_model(plat, faults=req.faults))
 
     def submit(self, req: WorkloadRequest) -> None:
@@ -184,11 +203,17 @@ class PredictionService:
                                    "before the breakdown DES started")
                 return
         try:
-            app = wl.des_app(plat, trace=True, faults=req.faults)
+            app = wl.des_app(plat, trace=True, faults=req.faults,
+                             regions=req.regions)
             if budget is not None:
                 app.engine.set_wall_deadline(budget)
             app.run()
-            out["breakdown"] = app.engine.trace.summary()
+            summary = app.engine.trace.summary()
+            if req.regions is not None:
+                # the trace covers only the simulated region
+                summary["region_approx"] = True
+                out["region_approx"] = True
+            out["breakdown"] = summary
             self.stats["des_breakdowns"] += 1
         except SimWallDeadline as exc:
             self._degrade(out, f"wall_deadline: {exc}")
@@ -279,7 +304,7 @@ class HPLPredictionService:
     new call sites should prefer the workload-generic
     ``PredictionService``."""
 
-    def __init__(self, max_batch: int = 256, max_des_ranks: int = 256):
+    def __init__(self, max_batch: int = 256, max_des_ranks: int = 1024):
         self.max_batch = max_batch
         self.max_des_ranks = max_des_ranks
         self._queue: List[PredictRequest] = []

@@ -151,12 +151,17 @@ class Workload(abc.ABC):
         (capacity, fabric kind, missing defaults)."""
 
     @abc.abstractmethod
-    def des_app(self, platform, *, trace: bool = False, faults=None):
+    def des_app(self, platform, *, trace: bool = False, faults=None,
+                regions=None):
         """The discrete-event application, built from the platform spec;
         the returned object has ``.run()`` and (traced) ``.trace``.
         ``faults`` is an optional ``repro.faults.FaultSpec`` (or dict /
         JSON form) injected into the run — every fault kind is
-        supported on this path."""
+        supported on this path.  ``regions`` (an int region length or a
+        ``repro.scale.RegionSpec``) switches to representative-region
+        simulation: one region of the iteration space runs on the exact
+        DES and the rest is replicated analytically, with results
+        stamped ``region_approx``."""
 
     @abc.abstractmethod
     def fastsim_model(self, platform, *, faults=None) -> FastModel:
@@ -178,11 +183,13 @@ class Workload(abc.ABC):
 
     @abc.abstractmethod
     def predict_des(self, platform, *, trace: bool = False,
-                    faults=None) -> dict:
+                    faults=None, regions=None) -> dict:
         """Full-DES prediction; with ``trace=True`` the result carries a
         ``breakdown`` (per-phase trace summary).  ``faults`` injects a
         degraded-platform scenario (all kinds; fail-stop runs report
-        ``failed=True``)."""
+        ``failed=True``).  ``regions`` requests representative-region
+        simulation (see ``des_app``); region results carry
+        ``region_approx=True``."""
 
     def __repr__(self) -> str:
         return f"{type(self).__name__}({self.spec.params_dict})"

@@ -54,9 +54,13 @@ class HPLWorkload(Workload):
                 f"{platform.name!r} has {platform.scale.n_ranks}")
 
     def des_app(self, platform, *, trace: bool = False,
-                faults=None) -> HPLSim:
-        return HPLSim(self.config(platform), platform, trace=trace,
-                      faults=faults)
+                faults=None, regions=None):
+        if regions is None:
+            return HPLSim(self.config(platform), platform, trace=trace,
+                          faults=faults)
+        from repro.scale import RegionHPLSim
+        return RegionHPLSim(self.config(platform), platform,
+                            region=regions, trace=trace, faults=faults)
 
     def des_ranks(self, platform) -> int:
         return self.config(platform).n_ranks
@@ -70,13 +74,19 @@ class HPLWorkload(Workload):
         return HPLFastModel(cfg=cfg, params=params)
 
     def predict_des(self, platform, *, trace: bool = False,
-                    faults=None) -> dict:
-        res = self.des_app(platform, trace=trace, faults=faults).run()
+                    faults=None, regions=None) -> dict:
+        res = self.des_app(platform, trace=trace, faults=faults,
+                           regions=regions).run()
         out = {"time_s": res.time_s, "gflops": res.gflops,
                "tflops": res.gflops / 1e3, "events": res.events}
         if res.failed:
             out["failed"] = True
             out["n_finished"] = res.n_finished
+        if res.region_approx:
+            out["region_approx"] = True
+            out["panels_simulated"] = res.region_panels
         if trace and res.trace is not None:
             out["breakdown"] = res.trace.summary()
+            if res.region_approx:
+                out["breakdown"]["region_approx"] = True
         return out

@@ -192,13 +192,23 @@ class TransformerWorkload(Workload):
         return StepWorkload(layers=layers, tail_collectives=tail)
 
     def des_app(self, platform, *, trace: bool = False, faults=None,
-                **kw) -> TransformerStepSim:
+                regions=None, **kw):
         self.validate(platform)
         d = self._derive(platform)
-        return TransformerStepSim.from_platform(
-            self.step_workload(platform), platform,
-            mesh=d["mesh"], pods=d["pods"], trace=trace, faults=faults,
-            **kw)
+
+        def build(workload, layer_marks=None):
+            return TransformerStepSim.from_platform(
+                workload, platform, mesh=d["mesh"], pods=d["pods"],
+                trace=trace, faults=faults, layer_marks=layer_marks, **kw)
+
+        if regions is None:
+            return build(self.step_workload(platform))
+        # representative region: the first `regions` layers run on the
+        # exact DES (with the full-L tail collectives — their wire bytes
+        # scale with the total layer count); the rest replicate the
+        # steady-state per-layer delta
+        from repro.scale import RegionStepSim
+        return RegionStepSim(self.step_workload(platform), regions, build)
 
     def fastsim_model(self, platform, *, faults=None) -> StepFastModel:
         self.validate(platform)
@@ -211,8 +221,9 @@ class TransformerWorkload(Workload):
                              tokens_per_step=d["tokens_per_step"])
 
     def predict_des(self, platform, *, trace: bool = False,
-                    faults=None) -> dict:
-        app = self.des_app(platform, trace=trace, faults=faults)
+                    faults=None, regions=None) -> dict:
+        app = self.des_app(platform, trace=trace, faults=faults,
+                           regions=regions)
         res = app.run()
         d = self._derive(platform)
         out = {"time_s": res["step_s"], "step_s": res["step_s"],
@@ -221,6 +232,11 @@ class TransformerWorkload(Workload):
         if res.get("failed"):
             out["failed"] = True
             out["n_finished"] = res["n_finished"]
+        if res.get("region_approx"):
+            out["region_approx"] = True
+            out["layers_simulated"] = res["layers_simulated"]
         if trace and app.trace.enabled:
             out["breakdown"] = app.trace.summary()
+            if res.get("region_approx"):
+                out["breakdown"]["region_approx"] = True
         return out

@@ -1,0 +1,213 @@
+"""Representative-region simulation + per-scale contention calibration
+(repro.scale, DESIGN.md §17).
+
+The region contract: ``des_app(platform, regions=R)`` simulates one
+representative prefix of the iteration space on the exact DES and
+prices the rest with the region-calibrated closed form, stamped
+``region_approx`` — within 10% of exact DES on every geometry small
+enough to check here (the acceptance sweep in DESIGN.md §17 covers
+10^4 ranks).
+"""
+import dataclasses
+import math
+
+import pytest
+
+from repro.core.apps.hpl import HPLConfig, HPLSim
+from repro.platforms import get_platform
+from repro.scale import (RegionHPLSim, RegionSpec, as_region,
+                         fit_contention_at_scale, scaled_probe_configs,
+                         square_grid)
+
+
+# ------------------------------------------------------------ RegionSpec
+def test_as_region_normalization():
+    assert as_region(None) == RegionSpec()
+    assert as_region(16) == RegionSpec(panels=16)
+    spec = RegionSpec(panels=20, warmup=4)
+    assert as_region(spec) is spec
+    with pytest.raises(TypeError):
+        as_region(True)
+    with pytest.raises(TypeError):
+        as_region("12")
+    with pytest.raises(ValueError):
+        RegionSpec(panels=4, warmup=2)       # no usable fit window
+    with pytest.raises(ValueError):
+        RegionSpec(panels=12, warmup=0)
+
+
+def test_square_grid():
+    assert square_grid(16) == (4, 4)
+    assert square_grid(12) == (3, 4)
+    assert square_grid(10000) == (100, 100)
+    assert square_grid(7) == (1, 7)
+    with pytest.raises(ValueError):
+        square_grid(0)
+
+
+# ------------------------------------------------------------ HPL region
+@pytest.mark.parametrize("cfg_kw", [
+    dict(N=4096, nb=128, P=2, Q=4),
+    dict(N=6144, nb=128, P=4, Q=4),
+    dict(N=4096, nb=128, P=2, Q=8),
+])
+def test_region_hpl_within_10pct_of_exact(cfg_kw):
+    plat = get_platform("frontera")
+    cfg = HPLConfig(lookahead=0, bcast=plat.mpi.bcast, **cfg_kw)
+    exact = HPLSim(cfg, plat).run()
+    res = RegionHPLSim(cfg, plat, region=12).run()
+    assert res.region_approx and res.region_panels == 12
+    assert res.events < exact.events          # strictly fewer DES events
+    err = abs(res.time_s - exact.time_s) / exact.time_s
+    assert err < 0.10, f"region error {err:.1%} on {cfg_kw}"
+    # gflops is recomputed from the extrapolated time
+    assert res.gflops == pytest.approx(cfg.flops() / res.time_s / 1e9)
+
+
+def test_region_hpl_exact_when_config_fits_region():
+    plat = get_platform("frontera")
+    cfg = HPLConfig(N=1024, nb=128, P=2, Q=2, lookahead=0,
+                    bcast=plat.mpi.bcast)
+    assert cfg.n_panels <= 12
+    exact = HPLSim(cfg, plat).run()
+    res = RegionHPLSim(cfg, plat, region=12).run()
+    assert not res.region_approx and res.region_panels == 0
+    assert res.time_s == exact.time_s and res.events == exact.events
+
+
+def test_region_hpl_feature_fit_fallback_without_platform():
+    # raw (node, topology) construction has no fastsim surface: the
+    # sign-constrained feature fit takes over
+    plat = get_platform("frontera")
+    stack = plat.des()
+    cfg = HPLConfig(N=4096, nb=128, P=2, Q=4, lookahead=0,
+                    bcast=plat.mpi.bcast)
+    exact = HPLSim(cfg, stack.node, stack.topology,
+                   ranks_per_node=stack.ranks_per_node,
+                   mpi_overhead=stack.mpi_overhead).run()
+    sim = RegionHPLSim(cfg, stack.node, stack.topology, region=12,
+                       ranks_per_node=stack.ranks_per_node,
+                       mpi_overhead=stack.mpi_overhead)
+    assert sim._platform is None
+    res = sim.run()
+    assert res.region_approx
+    err = abs(res.time_s - exact.time_s) / exact.time_s
+    assert err < 0.15, f"feature-fit fallback error {err:.1%}"
+
+
+def test_region_hpl_through_workload_protocol():
+    from repro.workloads import get_workload
+    plat = get_platform("frontera")
+    wl = get_workload("hpl", N=4096, nb=128, P=2, Q=4, lookahead=0)
+    exact = wl.predict_des(plat)
+    out = wl.predict_des(plat, regions=12, trace=True)
+    assert out["region_approx"] and out["panels_simulated"] == 12
+    assert out["breakdown"]["region_approx"]
+    assert abs(out["time_s"] - exact["time_s"]) / exact["time_s"] < 0.10
+    # exact runs carry no region stamp at all
+    assert "region_approx" not in exact
+
+
+# ---------------------------------------------------- transformer region
+def test_region_transformer_through_workload_protocol():
+    from repro.workloads import get_workload
+    plat = get_platform("tpu-v5e-pod")
+    wl = get_workload("transformer", mesh=(4, 8), num_layers=12)
+    exact = wl.predict_des(plat)
+    out = wl.predict_des(plat, regions=RegionSpec(panels=6, warmup=2))
+    assert out["region_approx"] and out["layers_simulated"] == 6
+    assert abs(out["time_s"] - exact["time_s"]) / exact["time_s"] < 0.10
+
+    # a model that fits inside the region runs exactly
+    small = get_workload("transformer", mesh=(4, 8), num_layers=4)
+    assert "region_approx" not in small.predict_des(plat, regions=6)
+
+
+# --------------------------------------------- per-scale contention table
+def test_with_contention_round_trip_and_provenance():
+    from repro.platforms.spec import Platform
+    plat = get_platform("frontera")
+    p2 = plat.with_contention(10_000, {"bcast_bw_scale": 1.7},
+                              note="region-fit test")
+    assert plat.contention == ()             # original untouched
+    assert p2.contention_dict == {10_000: {"bcast_bw_scale": 1.7}}
+    assert dict(p2.provenance)["contention@10000"] == "region-fit test"
+    # JSON round trip preserves the table
+    p3 = Platform.from_dict(p2.to_dict())
+    assert p3.contention_dict == p2.contention_dict
+    # re-fitting the same scale replaces the entry, not duplicates it
+    p4 = p2.with_contention(10_000, {"bcast_bw_scale": 2.1})
+    assert p4.contention_dict == {10_000: {"bcast_bw_scale": 2.1}}
+
+
+def test_fastsim_at_ranks_applies_nearest_log_space_entry():
+    plat = (get_platform("frontera")
+            .with_contention(100, {"bcast_bw_scale": 1.5})
+            .with_contention(10_000, {"bcast_bw_scale": 3.0}))
+    base = plat.fastsim()
+    # 500 is nearer 100 in log space; 5000 nearer 10000
+    assert plat.fastsim(at_ranks=500).bcast_bw_scale == 1.5
+    assert plat.fastsim(at_ranks=5000).bcast_bw_scale == 3.0
+    assert plat.contention_for(3000) == {"bcast_bw_scale": 3.0}
+    # fields outside the entry stay at base calibration
+    assert plat.fastsim(at_ranks=500).swap_bw_scale == base.swap_bw_scale
+    # no at_ranks -> base params, table ignored
+    assert plat.fastsim().bcast_bw_scale == base.bcast_bw_scale
+
+
+def test_scaled_probe_configs_geometry():
+    plat = get_platform("frontera")
+    cfgs = scaled_probe_configs(plat, 64, region=RegionSpec(panels=12))
+    assert all(c.P * c.Q == 64 and c.lookahead == 0 for c in cfgs)
+    assert [c.n_panels for c in cfgs] == [36, 48]
+    with pytest.raises(ValueError, match="capacity"):
+        scaled_probe_configs(plat, 10**6)
+
+
+def test_fit_contention_at_scale_smoke():
+    plat = get_platform("frontera")
+    sf = fit_contention_at_scale(
+        plat, 16, region=RegionSpec(panels=8, warmup=2),
+        probe_configs=[HPLConfig(N=3072, nb=128, P=4, Q=4, lookahead=0,
+                                 bcast=plat.mpi.bcast)],
+        steps=12)
+    assert sf.at_ranks == 16
+    assert set(sf.overrides) == {"bcast_bw_scale", "swap_bw_scale"}
+    assert all(v > 0 for v in sf.overrides.values())
+    assert sf.platform.contention_dict[16] == sf.overrides
+    note = dict(sf.platform.provenance)["contention@16"]
+    assert "region-fit" in note and "panels=8" in note
+    # the per-scale entry feeds fastsim(at_ranks=...)
+    prm = sf.platform.fastsim(at_ranks=16)
+    assert prm.bcast_bw_scale == pytest.approx(
+        sf.overrides["bcast_bw_scale"])
+
+
+# ------------------------------------------------------------- serving
+def test_serve_region_breakdown_stamps_region_approx():
+    from repro.serve import PredictionService, WorkloadRequest
+    svc = PredictionService()
+    out = svc.predict_batch([WorkloadRequest(
+        rid=0, workload="hpl", platform="frontera",
+        params={"N": 4096, "nb": 128, "P": 2, "Q": 4, "lookahead": 0},
+        breakdown=True, regions=12)])
+    r = out[0]
+    assert r["region_approx"]
+    assert r["breakdown"]["region_approx"]
+
+
+def test_serve_region_guard_uses_max_region_ranks():
+    from repro.serve import PredictionService, WorkloadRequest
+    svc = PredictionService(max_region_ranks=8)
+    with pytest.raises(ValueError, match="max_region_ranks"):
+        svc.predict_batch([WorkloadRequest(
+            rid=0, workload="hpl", platform="frontera",
+            params={"N": 4096, "nb": 128, "P": 4, "Q": 4, "lookahead": 0},
+            breakdown=True, regions=12)])
+    # non-region breakdowns still answer to max_des_ranks (the error
+    # suggests the regions= escape hatch)
+    with pytest.raises(ValueError, match="max_des_ranks"):
+        PredictionService(max_des_ranks=8).predict_batch([WorkloadRequest(
+            rid=0, workload="hpl", platform="frontera",
+            params={"N": 4096, "nb": 128, "P": 4, "Q": 4, "lookahead": 0},
+            breakdown=True)])
