@@ -28,6 +28,7 @@ MODULES = [
     "benchmarks.kernels_bench",         # Pallas kernels
     "benchmarks.faults_bench",          # degraded fleet + hardened serve
     "benchmarks.engine_bench",          # DES hot loop vs frozen legacy
+    "benchmarks.serve_bench",           # serving throughput + latency
 ]
 
 # --smoke: the fast subset CI runs on every push so benchmark entry
@@ -44,6 +45,7 @@ SMOKE_MODULES = [
     "benchmarks.trace_breakdown",
     "benchmarks.faults_bench",
     "benchmarks.engine_bench",
+    "benchmarks.serve_bench",
 ]
 
 

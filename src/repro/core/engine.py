@@ -52,7 +52,15 @@ import math
 import time
 from typing import Any, Callable, Generator, List, Optional
 
+from repro.obs.metrics import NULL_METRICS
 from repro.trace.recorder import NULL_RECORDER, TraceRecorder
+
+
+# engine-telemetry histogram buckets (events/s spans interpreted-loop
+# rates; recycle rate is a fraction of events)
+_EVENTS_PER_S_BUCKETS = (1e3, 2.5e3, 5e3, 1e4, 2.5e4, 5e4, 1e5, 2e5,
+                         3e5, 5e5, 1e6, 2e6, 5e6)
+_RECYCLE_BUCKETS = (0.01, 0.025, 0.05, 0.1, 0.2, 0.3, 0.5, 0.75, 1.0)
 
 
 class ProcessError(RuntimeError):
@@ -267,6 +275,14 @@ class Engine:
         from repro.faults.inject import NULL_FAULTS
         self.faults = NULL_FAULTS
         self.wall_deadline: Optional[float] = None
+        # metrics sink (repro.obs): NULL_METRICS unless a caller hangs a
+        # registry here; run() then takes the metered mirror loop, so
+        # the hot loop below never tests the flag per event.  Recycles
+        # are counted unconditionally — one int add inside a function
+        # call that already happened, invisible next to the event cost.
+        self.metrics = NULL_METRICS
+        self.recycles = 0
+        self._recycles_seen = 0
 
     def event(self) -> Event:
         pool = self._event_pool
@@ -284,6 +300,7 @@ class Engine:
         # never recycles, so no defensive clear needed — but it's cheap
         ev.waiters.clear()
         self._event_pool.append(ev)
+        self.recycles += 1
 
     def pending(self) -> int:
         """Events scheduled but not yet dispatched (both queues)."""
@@ -328,6 +345,8 @@ class Engine:
     def run(self, until: float = math.inf) -> float:
         if self.wall_deadline is not None:
             return self._run_deadline(until)
+        if self.metrics.enabled:
+            return self._run_metered(until)
         heap = self._heap
         seqs = self._nq_seq
         fns = self._nq_fn
@@ -385,11 +404,110 @@ class Engine:
             self._nowq_head = head
         return self.now
 
+    def _run_metered(self, until: float) -> float:
+        # metrics-on mirror of run(): same dispatch order (the registry
+        # never schedules events, so simulated results stay
+        # bit-identical — asserted in tests/test_obs.py), plus a
+        # queue-depth high-water probe per dispatched event and a
+        # metrics flush on exit.  Kept separate so the metrics-off hot
+        # loop above never pays for either.
+        heap = self._heap
+        seqs = self._nq_seq
+        fns = self._nq_fn
+        args = self._nq_arg
+        pop = heapq.heappop
+        head = self._nowq_head
+        count = self.event_count
+        now = self.now
+        ev0 = count
+        hw = 0
+        t0 = time.perf_counter()
+        try:
+            while True:
+                depth = len(heap) + len(seqs) - head
+                if depth > hw:
+                    hw = depth
+                if head < len(seqs):
+                    if now > until:
+                        break
+                    if heap:
+                        s = heap[0]
+                        if s[0] == now and s[1] < seqs[head]:
+                            pop(heap)
+                            count += 1
+                            s[2](s[3])
+                            continue
+                    fn = fns[head]
+                    arg = args[head]
+                    head += 1
+                    if head >= 8192:
+                        del seqs[:head]   # see run(): bound retention
+                        del fns[:head]
+                        del args[:head]
+                        head = 0
+                    count += 1
+                    fn(arg)
+                    continue
+                if head:
+                    seqs.clear()
+                    fns.clear()
+                    args.clear()
+                    head = 0
+                if not heap:
+                    break
+                s = heap[0]
+                t = s[0]
+                if t > until:
+                    break
+                pop(heap)
+                self.now = now = t
+                count += 1
+                s[2](s[3])
+        finally:
+            self.event_count = count
+            self._nowq_head = head
+            self._flush_metrics(ev0, t0, high_water=hw)
+        return self.now
+
+    def _flush_metrics(self, ev0: int, t0: float,
+                       high_water: Optional[int] = None) -> None:
+        """Record one run()'s engine telemetry into ``self.metrics``
+        (events, events/s distribution, queue-depth high-water via the
+        ``queue_depth()`` probe, pool recycle rate)."""
+        m = self.metrics
+        ev = self.event_count - ev0
+        dt = time.perf_counter() - t0
+        m.counter("engine.runs").inc()
+        m.counter("engine.events").inc(ev)
+        rec = self.recycles - self._recycles_seen
+        self._recycles_seen = self.recycles
+        m.counter("engine.event_recycles").inc(rec)
+        m.gauge("engine.event_pool").set(len(self._event_pool))
+        if high_water is not None:
+            m.gauge("engine.queue_depth_peak").set(high_water)
+        if ev and dt > 0.0:
+            m.histogram("engine.events_per_s",
+                        buckets=_EVENTS_PER_S_BUCKETS).observe(ev / dt)
+            m.histogram("engine.run_wall_s").observe(dt)
+            m.histogram("engine.recycle_rate",
+                        buckets=_RECYCLE_BUCKETS).observe(rec / ev)
+
     def _run_deadline(self, until: float) -> float:
         # separate loop so the unbudgeted hot path above stays
         # untouched; the clock syscall is amortized over 1024-event
         # slices.  Dispatch logic mirrors run() exactly (equivalence is
-        # asserted under deadline in tests/test_engine_order.py).
+        # asserted under deadline in tests/test_engine_order.py).  With
+        # a metrics registry attached, flush engine telemetry on the
+        # way out (including the SimWallDeadline path).
+        if self.metrics.enabled:
+            ev0, t0 = self.event_count, time.perf_counter()
+            try:
+                return self._run_deadline_loop(until)
+            finally:
+                self._flush_metrics(ev0, t0)
+        return self._run_deadline_loop(until)
+
+    def _run_deadline_loop(self, until: float) -> float:
         heap = self._heap
         seqs = self._nq_seq
         fns = self._nq_fn

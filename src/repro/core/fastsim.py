@@ -29,12 +29,15 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import time
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
+
+from repro.obs.metrics import RATIO_BUCKETS, get_global_metrics
 
 from .apps.hpl import HPLConfig
 from .hardware.node import NodeModel
@@ -326,10 +329,37 @@ def _compiled(n_panels_max: int, P_max: int, Q_max: int, mode: str):
     return jax.jit(jax.vmap(fn) if mode == "batch" else fn)
 
 
+def _record_dispatch(m, key: Tuple[int, int, int], pre_traces: int,
+                     dt: float, live: int, lanes: int) -> None:
+    """One compiled-program dispatch into the global metrics registry:
+    compile-cache hit/miss (and compile wall) per shape bucket, plus
+    sweep-lane occupancy — padding lanes are pure waste, so the ratio
+    is the sweep engine's utilization number."""
+    bucket = "x".join(str(b) for b in key)
+    misses = trace_count() - pre_traces
+    if misses:
+        m.counter("fastsim.compile_misses", bucket=bucket).inc(misses)
+        m.histogram("fastsim.compile_wall_s", bucket=bucket).observe(dt)
+    else:
+        m.counter("fastsim.compile_hits", bucket=bucket).inc()
+        m.histogram("fastsim.dispatch_wall_s").observe(dt)
+    m.counter("fastsim.lanes_live").inc(live)
+    m.counter("fastsim.lanes_padded").inc(lanes - live)
+    m.histogram("fastsim.sweep_occupancy", RATIO_BUCKETS).observe(
+        live / lanes)
+
+
 def _run_single(cfg: HPLConfig, prm: FastSimParams) -> float:
     fn = _compiled(*bucket_key(cfg), "single")
-    return float(fn(np.int64(cfg.N), np.int64(cfg.nb),
-                    np.int64(cfg.P), np.int64(cfg.Q), _f64_params(prm)))
+    m = get_global_metrics()
+    if not m.enabled:
+        return float(fn(np.int64(cfg.N), np.int64(cfg.nb),
+                        np.int64(cfg.P), np.int64(cfg.Q), _f64_params(prm)))
+    pre, t0 = trace_count(), time.perf_counter()
+    out = float(fn(np.int64(cfg.N), np.int64(cfg.nb),
+                   np.int64(cfg.P), np.int64(cfg.Q), _f64_params(prm)))
+    _record_dispatch(m, bucket_key(cfg), pre, time.perf_counter() - t0, 1, 1)
+    return out
 
 
 def _stack_params(prm_list: Sequence[FastSimParams],
@@ -411,6 +441,7 @@ def sweep_hpl(configs: Configs, params: Params, *,
 
     times = np.empty(len(cfg_list), np.float64)
     mixed: Dict[Tuple[int, int, int], List[int]] = {}
+    m = get_global_metrics()
     with enable_x64(True):
         for (N, nb, P, Q), idxs in by_cfg.items():
             key = bucket_key(cfg_list[idxs[0]])
@@ -419,8 +450,13 @@ def sweep_hpl(configs: Configs, params: Params, *,
                 continue
             lanes = _pad_pow2(idxs)
             fn = _compiled(*key, "params")
+            if m.enabled:
+                pre, t0 = trace_count(), time.perf_counter()
             out = np.asarray(fn(np.int64(N), np.int64(nb), np.int64(P),
                                 np.int64(Q), _stack_params(prm_list, lanes)))
+            if m.enabled:
+                _record_dispatch(m, key, pre, time.perf_counter() - t0,
+                                 len(idxs), len(lanes))
             times[idxs] = out[:len(idxs)]
         for key, idxs in mixed.items():
             if len(idxs) == 1:
@@ -432,8 +468,13 @@ def sweep_hpl(configs: Configs, params: Params, *,
                                 cfg_list[i].P, cfg_list[i].Q]
                                for i in lanes], np.int64)
             fn = _compiled(*key, "batch")
+            if m.enabled:
+                pre, t0 = trace_count(), time.perf_counter()
             out = np.asarray(fn(geom[:, 0], geom[:, 1], geom[:, 2],
                                 geom[:, 3], _stack_params(prm_list, lanes)))
+            if m.enabled:
+                _record_dispatch(m, key, pre, time.perf_counter() - t0,
+                                 len(idxs), len(lanes))
             times[idxs] = out[:len(idxs)]
     return [_result(cfg, float(t)) for cfg, t in zip(cfg_list, times)]
 
@@ -456,9 +497,16 @@ def _sweep_forced_bucket(cfg_list: Sequence[HPLConfig],
     geom = np.asarray([[cfg_list[i].N, cfg_list[i].nb,
                         cfg_list[i].P, cfg_list[i].Q]
                        for i in lanes], np.int64)
+    m = get_global_metrics()
     with enable_x64(True):
         fn = _compiled(n_panels_max, P_max, Q_max, "batch")
+        if m.enabled:
+            pre, t0 = trace_count(), time.perf_counter()
         out = np.asarray(fn(geom[:, 0], geom[:, 1], geom[:, 2], geom[:, 3],
                             _stack_params(prm_list, lanes)))
+        if m.enabled:
+            _record_dispatch(m, (n_panels_max, P_max, Q_max), pre,
+                             time.perf_counter() - t0, len(cfg_list),
+                             len(lanes))
     return [_result(cfg, float(t))
             for cfg, t in zip(cfg_list, out[:len(cfg_list)])]

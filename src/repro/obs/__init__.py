@@ -1,0 +1,39 @@
+"""repro.obs — metrics & telemetry for the serving + simulation stack.
+
+Zero-overhead-when-off metrics in the trace subsystem's null-object
+style (DESIGN.md §18): ``MetricsRegistry`` (counters / gauges /
+fixed-bucket histograms, mergeable and JSON round-trip), ``Timer``
+spans, a Prometheus text exporter, and NDJSON run manifests.
+
+Quickstart::
+
+    from repro.obs import MetricsRegistry
+    from repro.serve import PredictionService, WorkloadRequest
+
+    svc = PredictionService()            # metrics on by default
+    svc.predict_batch([WorkloadRequest(rid=0, workload="hpl",
+                                       platform="frontera")])
+    print(svc.metrics.to_prometheus())   # scrape surface
+    print(svc.manifest())                # one NDJSON run manifest line
+
+Simulation layers stay metrics-free unless opted in: hang a registry on
+``engine.metrics`` (DES) or install one with ``set_global_metrics``
+(fastsim / stepsim compile-cache and sweep-lane metrics).  Instrumented
+runs are bit-identical to uninstrumented ones — the registry only
+observes.
+"""
+from .export import (append_manifest, manifest_line, manifest_record,
+                     read_manifest, to_prometheus,
+                     validate_prometheus_text)
+from .metrics import (COUNT_BUCKETS, DEFAULT_LATENCY_BUCKETS, NULL_METRICS,
+                      RATIO_BUCKETS, Counter, Gauge, Histogram,
+                      MetricsRegistry, Timer, get_global_metrics,
+                      global_metrics, merge_snapshots, set_global_metrics)
+
+__all__ = [
+    "MetricsRegistry", "NULL_METRICS", "Counter", "Gauge", "Histogram",
+    "Timer", "DEFAULT_LATENCY_BUCKETS", "COUNT_BUCKETS", "RATIO_BUCKETS",
+    "merge_snapshots", "get_global_metrics", "set_global_metrics",
+    "global_metrics", "to_prometheus", "validate_prometheus_text",
+    "manifest_record", "manifest_line", "append_manifest", "read_manifest",
+]

@@ -52,6 +52,24 @@ above is the default):
   * ``WorkloadRequest.faults`` runs the scenario on a degraded platform
     (``repro.faults``): folded into the fast model's params and, for
     breakdown requests, injected into the DES.
+
+Observability (``repro.obs``, DESIGN.md §18): both services carry a
+``MetricsRegistry`` (``svc.metrics``; pass ``metrics=NULL_METRICS`` to
+switch it off, or share one registry across services/replicas — they
+merge).  Counters back every hardening path (retries, deadline
+fallbacks, degraded answers, isolated errors, rank-guard trips,
+dispatch failures), per-request latency and wave size are recorded as
+histograms (distributions, not point numbers), and the queue depth is a
+gauge with a tracked peak.  ``svc.metrics.to_prometheus()`` is the
+scrape surface; ``svc.manifest()`` emits one NDJSON run-manifest line.
+Breakdown DES runs report engine telemetry into the same registry.
+
+Dispatch is all-or-nothing per wave: every family's sweep runs before
+any result is attached, and a dispatch that fails (after retries)
+stamps every request in the wave with a ``{"status": "error", ...}``
+result, re-raises, and leaves the queue holding only the requests
+behind the wave — the service stays reusable and the queue clean (the
+PR 4 resolve-all-before-enqueue guarantee, extended to dispatch time).
 """
 from __future__ import annotations
 
@@ -62,6 +80,7 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence
 from repro.core.apps.hpl import HPLConfig
 from repro.core.engine import SimWallDeadline
 from repro.core.fastsim import FastSimParams, sweep_hpl, trace_count
+from repro.obs import COUNT_BUCKETS, MetricsRegistry, manifest_line
 
 
 @dataclasses.dataclass
@@ -72,6 +91,7 @@ class PredictRequest:
     platform: Optional[str] = None       # registry name; fills cfg/params
     breakdown: bool = False              # attach a DES phase breakdown
     result: Optional[dict] = None
+    _t_submit: Optional[float] = dataclasses.field(default=None, repr=False)
 
 
 @dataclasses.dataclass
@@ -96,6 +116,7 @@ class WorkloadRequest:
     #        ^ (workload, platform, fastmodel), set by _resolve
     _deadline: Optional[float] = dataclasses.field(default=None, repr=False)
     _fallback: Optional[str] = dataclasses.field(default=None, repr=False)
+    _t_submit: Optional[float] = dataclasses.field(default=None, repr=False)
 
 
 class PredictionService:
@@ -109,7 +130,8 @@ class PredictionService:
 
     def __init__(self, max_batch: int = 256, max_des_ranks: int = 1024,
                  max_region_ranks: int = 16384,
-                 retries: int = 2, backoff_s: float = 0.05):
+                 retries: int = 2, backoff_s: float = 0.05,
+                 metrics: Any = None):
         self.max_batch = max_batch
         self.max_des_ranks = max_des_ranks
         self.max_region_ranks = max_region_ranks
@@ -119,6 +141,9 @@ class PredictionService:
         self.stats = {"requests": 0, "batches": 0, "scenarios": 0,
                       "sweeps": 0, "des_breakdowns": 0, "retries": 0,
                       "fallbacks": 0, "errors": 0}
+        #: on by default (a fresh registry); pass NULL_METRICS to opt
+        #: out or a shared registry to aggregate across services
+        self.metrics = MetricsRegistry() if metrics is None else metrics
 
     def _resolve(self, req: WorkloadRequest) -> None:
         """Bind names to specs and build the fast model; idempotent, and
@@ -174,6 +199,10 @@ class PredictionService:
             req._deadline = time.monotonic() + req.timeout_s
         self.stats["requests"] += 1
         self._queue.append(req)
+        if self.metrics.enabled:
+            req._t_submit = time.perf_counter()
+            self.metrics.counter("serve.requests").inc()
+            self.metrics.gauge("serve.queue_depth").set(len(self._queue))
 
     def _dispatch(self, model_cls, reqs: List[WorkloadRequest]) -> List[dict]:
         """One batched sweep per family, with bounded retry + exponential
@@ -187,6 +216,7 @@ class PredictionService:
                 if attempt == self.retries:
                     raise
                 self.stats["retries"] += 1
+                self.metrics.counter("serve.retries").inc()
                 time.sleep(delay)
                 delay *= 2.0
 
@@ -200,14 +230,23 @@ class PredictionService:
             budget = req._deadline - time.monotonic()
             if budget <= 0.0:
                 self._degrade(out, "deadline_exceeded: wall budget spent "
-                                   "before the breakdown DES started")
+                                   "before the breakdown DES started",
+                              kind="deadline")
                 return
         try:
             app = wl.des_app(plat, trace=True, faults=req.faults,
                              regions=req.regions)
             if budget is not None:
                 app.engine.set_wall_deadline(budget)
-            app.run()
+            if self.metrics.enabled:
+                # DES telemetry (events/s, heap depth, recycle rate)
+                # lands in the service registry; engine.metrics only
+                # observes, so the simulated clock is unchanged
+                app.engine.metrics = self.metrics
+                with self.metrics.timer("serve.des_wall_s"):
+                    app.run()
+            else:
+                app.run()
             summary = app.engine.trace.summary()
             if req.regions is not None:
                 # the trace covers only the simulated region
@@ -215,38 +254,81 @@ class PredictionService:
                 out["region_approx"] = True
             out["breakdown"] = summary
             self.stats["des_breakdowns"] += 1
+            self.metrics.counter("serve.des_breakdowns").inc()
         except SimWallDeadline as exc:
-            self._degrade(out, f"wall_deadline: {exc}")
+            self._degrade(out, f"wall_deadline: {exc}", kind="deadline")
 
-    def _degrade(self, out: dict, reason: str) -> None:
+    def _degrade(self, out: dict, reason: str, *,
+                 kind: str = "deadline") -> None:
+        """Stamp a degraded (fastsim-only) answer.  ``kind`` routes the
+        counter: "deadline" for wall-budget fallbacks, "rank_guard" for
+        breakdown requests over the DES rank cap."""
         out["fallback_reason"] = reason
         out["degraded"] = True
         self.stats["fallbacks"] += 1
+        if self.metrics.enabled:
+            self.metrics.counter("serve.fallbacks").inc()
+            self.metrics.counter(
+                "serve.deadline_fallbacks" if kind == "deadline"
+                else "serve.rank_guard_trips").inc()
 
     def flush(self) -> Dict[int, dict]:
         """Drain the queue in waves of up to ``max_batch`` scenarios;
         each wave groups requests by workload family and runs ONE
-        ``sweep_models`` dispatch per family.  Returns {rid: result}."""
+        ``sweep_models`` dispatch per family.  Returns {rid: result}.
+
+        Dispatch is all-or-nothing per wave: every family's sweep runs
+        before any result is attached.  If one family's dispatch fails
+        (after retries), every request in the wave is stamped with a
+        ``{"status": "error", ...}`` result, the exception re-raises,
+        and the queue keeps only the requests behind the wave — the
+        service stays reusable with a clean queue."""
         results: Dict[int, dict] = {}
+        m = self.metrics
         while self._queue:
             wave = self._queue[:self.max_batch]
             del self._queue[:self.max_batch]
+            if m.enabled:
+                m.histogram("serve.wave_size", COUNT_BUCKETS).observe(
+                    len(wave))
+                m.gauge("serve.queue_depth").set(len(self._queue))
             by_family: Dict[type, List[WorkloadRequest]] = {}
             for req in wave:
                 by_family.setdefault(type(req._bound[2]), []).append(req)
-            for model_cls, reqs in by_family.items():
-                res = self._dispatch(model_cls, reqs)
-                self.stats["sweeps"] += 1
+            dispatched: List[tuple] = []
+            try:
+                for model_cls, reqs in by_family.items():
+                    dispatched.append((reqs, self._dispatch(model_cls, reqs)))
+                    self.stats["sweeps"] += 1
+                    m.counter("serve.sweeps").inc()
+            except Exception as exc:
+                # the wave is already off the queue; stamp every request
+                # so callers holding the objects see the failure, then
+                # surface it (stats/metrics record the wave as failed)
+                err = {"status": "error", "error": str(exc),
+                       "error_type": type(exc).__name__}
+                for req in wave:
+                    req.result = dict(err)
+                self.stats["errors"] += 1
+                m.counter("serve.dispatch_failures").inc()
+                raise
+            for reqs, res in dispatched:
                 for req, out in zip(reqs, res):
                     out = dict(out)
                     if req._fallback is not None:    # rank-guard degrade
-                        self._degrade(out, req._fallback)
+                        self._degrade(out, req._fallback, kind="rank_guard")
                     elif req.breakdown:
                         self._attach_breakdown(req, out)
                     req.result = out
                     results[req.rid] = out
+                    if m.enabled and req._t_submit is not None:
+                        m.histogram("serve.request_latency_s").observe(
+                            time.perf_counter() - req._t_submit)
             self.stats["batches"] += 1
             self.stats["scenarios"] += len(wave)
+            if m.enabled:
+                m.counter("serve.batches").inc()
+                m.counter("serve.scenarios").inc(len(wave))
         return results
 
     def predict_batch(self, requests: Sequence[WorkloadRequest], *,
@@ -281,6 +363,7 @@ class PredictionService:
                 req.result = err
                 results[req.rid] = err
                 self.stats["errors"] += 1
+                self.metrics.counter("serve.errors_isolated").inc()
         for req in good:
             self.submit(req)
         if good:
@@ -297,6 +380,19 @@ class PredictionService:
                              params=params, faults=faults,
                              timeout_s=timeout_s)])[0]
 
+    # ------------------------------------------------------ observability
+    def prometheus(self) -> str:
+        """The service's metrics in Prometheus text exposition format."""
+        return self.metrics.to_prometheus()
+
+    def manifest(self, **meta) -> str:
+        """One NDJSON run-manifest line: service config + lifetime stats
+        as ``meta`` and the full metrics snapshot (see ``repro.obs``)."""
+        base = {"service": type(self).__name__,
+                "max_batch": self.max_batch, "stats": dict(self.stats)}
+        base.update(meta)
+        return manifest_line("serve_run", meta=base, metrics=self.metrics)
+
 
 class HPLPredictionService:
     """Micro-batching front end over the batched sweep engine — the
@@ -304,12 +400,17 @@ class HPLPredictionService:
     new call sites should prefer the workload-generic
     ``PredictionService``."""
 
-    def __init__(self, max_batch: int = 256, max_des_ranks: int = 1024):
+    def __init__(self, max_batch: int = 256, max_des_ranks: int = 1024,
+                 metrics: Any = None):
         self.max_batch = max_batch
         self.max_des_ranks = max_des_ranks
         self._queue: List[PredictRequest] = []
         self.stats = {"requests": 0, "batches": 0, "scenarios": 0,
                       "traces": 0, "des_breakdowns": 0}
+        #: same metric names as PredictionService (serve.requests,
+        #: serve.batches, serve.scenarios, serve.sweeps, ...), so the
+        #: two endpoints are drop-in equivalents on a dashboard
+        self.metrics = MetricsRegistry() if metrics is None else metrics
 
     def _resolve(self, req: PredictRequest) -> None:
         if req.params is None or req.cfg is None:
@@ -338,16 +439,27 @@ class HPLPredictionService:
         self._resolve(req)
         self.stats["requests"] += 1
         self._queue.append(req)
+        if self.metrics.enabled:
+            req._t_submit = time.perf_counter()
+            self.metrics.counter("serve.requests").inc()
+            self.metrics.gauge("serve.queue_depth").set(len(self._queue))
 
     def _des_breakdown(self, req: PredictRequest) -> dict:
         """Traced DES of the request scenario -> phase/category report."""
         from repro.core.apps.hpl import HPLSim
         from repro.platforms import get_platform
-        res = HPLSim(req.cfg, get_platform(req.platform), trace=True).run()
+        sim = HPLSim(req.cfg, get_platform(req.platform), trace=True)
+        if self.metrics.enabled:
+            sim.engine.metrics = self.metrics
+            with self.metrics.timer("serve.des_wall_s"):
+                res = sim.run()
+        else:
+            res = sim.run()
         out = res.trace.summary()
         out["des_time_s"] = res.time_s
         out["des_gflops"] = res.gflops
         self.stats["des_breakdowns"] += 1
+        self.metrics.counter("serve.des_breakdowns").inc()
         return out
 
     def flush(self) -> Dict[int, dict]:
@@ -358,20 +470,32 @@ class HPLPredictionService:
         {rid: result-dict} for everything served.
         """
         results: Dict[int, dict] = {}
+        m = self.metrics
         t0 = trace_count()
         while self._queue:
             wave = self._queue[:self.max_batch]
             del self._queue[:self.max_batch]
+            if m.enabled:
+                m.histogram("serve.wave_size", COUNT_BUCKETS).observe(
+                    len(wave))
+                m.gauge("serve.queue_depth").set(len(self._queue))
             res = sweep_hpl([r.cfg for r in wave],
                             [r.params for r in wave])
+            m.counter("serve.sweeps").inc()   # one sweep_hpl per wave
             for req, out in zip(wave, res):
                 if req.breakdown:
                     out = dict(out)
                     out["breakdown"] = self._des_breakdown(req)
                 req.result = out
                 results[req.rid] = out
+                if m.enabled and req._t_submit is not None:
+                    m.histogram("serve.request_latency_s").observe(
+                        time.perf_counter() - req._t_submit)
             self.stats["batches"] += 1
             self.stats["scenarios"] += len(wave)
+            if m.enabled:
+                m.counter("serve.batches").inc()
+                m.counter("serve.scenarios").inc(len(wave))
         self.stats["traces"] += trace_count() - t0
         return results
 
@@ -408,15 +532,32 @@ class HPLPredictionService:
         """Serve a whole TOP500 list export: ranked predicted-vs-
         published Rmax report as a JSON-safe dict (delegates to
         ``repro.top500.predict_top500``; same keywords)."""
-        report = predict_top500(csv_path, **kw)
+        report = predict_top500(csv_path, metrics=self.metrics, **kw)
         self.stats["requests"] += len(report.entries)
         self.stats["scenarios"] += len(report.entries)
         self.stats["batches"] += 1
+        if self.metrics.enabled:
+            self.metrics.counter("serve.requests").inc(len(report.entries))
+            self.metrics.counter("serve.scenarios").inc(len(report.entries))
+            self.metrics.counter("serve.batches").inc()
         return report.to_dict()
+
+    # ------------------------------------------------------ observability
+    def prometheus(self) -> str:
+        """The service's metrics in Prometheus text exposition format."""
+        return self.metrics.to_prometheus()
+
+    def manifest(self, **meta) -> str:
+        """One NDJSON run-manifest line (same shape as
+        ``PredictionService.manifest``)."""
+        base = {"service": type(self).__name__,
+                "max_batch": self.max_batch, "stats": dict(self.stats)}
+        base.update(meta)
+        return manifest_line("serve_run", meta=base, metrics=self.metrics)
 
 
 def predict_top500(csv_path, *, namespace: Optional[str] = None,
-                   overwrite: bool = False, **kw):
+                   overwrite: bool = False, metrics: Any = None, **kw):
     """Parse a TOP500 list export, infer a Platform per row, and predict
     the whole fleet in one batched sweep — returns the ``FleetReport``
     (rows the lenient parser rejected surface in ``report.skipped_rows``;
@@ -431,6 +572,9 @@ def predict_top500(csv_path, *, namespace: Optional[str] = None,
     """
     from repro.top500 import infer_platforms, parse_top500, predict_fleet
     parsed = parse_top500(csv_path)
+    if metrics is not None and metrics.enabled:
+        metrics.counter("fleet.rows_parsed").inc(len(parsed.rows))
+        metrics.counter("fleet.rows_skipped").inc(len(parsed.skipped))
     if not parsed.rows:
         raise ValueError(
             f"predict_top500: no parseable rows in {csv_path!r}; "
@@ -442,6 +586,6 @@ def predict_top500(csv_path, *, namespace: Optional[str] = None,
         from repro.platforms import bulk_register
         platforms = bulk_register(platforms, namespace=namespace,
                                   overwrite=overwrite)
-    report = predict_fleet(platforms, **kw)
+    report = predict_fleet(platforms, metrics=metrics, **kw)
     report.skipped_rows = list(parsed.skipped)
     return report

@@ -96,7 +96,8 @@ def fleet_bucket(cfgs: Sequence[object]) -> Tuple[int, int, int]:
 def predict_fleet(source, *,
                   tuning: Optional[FleetTuning] = None,
                   calibrate: bool = True,
-                  infer_kw: Optional[dict] = None) -> "FleetReport":
+                  infer_kw: Optional[dict] = None,
+                  metrics=None) -> "FleetReport":
     """Rows (or pre-inferred Platforms) -> ranked predicted-vs-published
     Rmax report, via one forced-bucket ``sweep_hpl`` call.
 
@@ -104,9 +105,20 @@ def predict_fleet(source, *,
     ``calibrate=True`` the per-fabric-family residual pass runs on a
     deterministic train split and held-out error is reported (see
     top500/calibrate.py).
-    """
-    from repro.core.fastsim import sweep_hpl, trace_count
 
+    ``metrics`` (a ``repro.obs.MetricsRegistry``) opts the run into
+    fleet telemetry: machine/compile counters, per-provenance-source
+    counts, per-phase wall times (tune / sweep / calibrate) and the
+    fitted family calibration factors as gauges.  The registry rides on
+    the returned report so ``report.run_manifest()`` can emit the
+    per-run NDJSON artifact the campaign layer consumes.
+    """
+    import time as _time
+
+    from repro.core.fastsim import sweep_hpl, trace_count
+    from repro.obs.metrics import NULL_METRICS
+
+    m = metrics if metrics is not None else NULL_METRICS
     tuning = tuning or FleetTuning()
     items = list(source)
     if not items:
@@ -117,6 +129,7 @@ def predict_fleet(source, *,
     else:
         platforms = items
 
+    t0 = _time.perf_counter()
     entries: List[FleetEntry] = []
     for plat in platforms:
         cfg, scale = tune_scenario(plat, tuning)
@@ -124,21 +137,39 @@ def predict_fleet(source, *,
             platform=plat, cfg=cfg, scale=scale,
             family=fabric_group(plat),
             published_tflops=plat.scale.reported_tflops))
+    if m.enabled:
+        m.histogram("fleet.phase_wall_s", phase="tune").observe(
+            _time.perf_counter() - t0)
+        m.counter("fleet.machines").inc(len(entries))
+        for e in entries:
+            for src, _ in e.platform.provenance:
+                m.counter("fleet.provenance", source=src).inc()
 
     bucket = fleet_bucket([e.cfg for e in entries])
     compiles0 = trace_count()
+    t0 = _time.perf_counter()
     results = sweep_hpl([e.cfg for e in entries],
                         [e.platform.fastsim() for e in entries],
                         bucket=bucket)
     compiles = trace_count() - compiles0
+    if m.enabled:
+        m.histogram("fleet.phase_wall_s", phase="sweep").observe(
+            _time.perf_counter() - t0)
+        m.counter("fleet.compiles").inc(compiles)
     for e, res in zip(entries, results):
         e.predicted_tflops = res["tflops"] * e.scale
 
     report = FleetReport(entries=entries, bucket=bucket,
-                         compiles=compiles, tuning=tuning)
+                         compiles=compiles, tuning=tuning, metrics=m)
     if calibrate:
         from .calibrate import calibrate_fleet
+        t0 = _time.perf_counter()
         report.calibration = calibrate_fleet(entries)
+        if m.enabled:
+            m.histogram("fleet.phase_wall_s", phase="calibrate").observe(
+                _time.perf_counter() - t0)
+            for fam, f in sorted(report.calibration.factors.items()):
+                m.gauge("fleet.calibration_factor", family=fam).set(f)
     return report
 
 
@@ -152,6 +183,7 @@ class FleetReport:
     calibration: Optional[object] = None    # CalibrationResult
     skipped_rows: List = dataclasses.field(default_factory=list)
     #                    ^ (line, reason) pairs the parser rejected
+    metrics: Optional[object] = None        # registry the run reported to
 
     def ranked(self) -> List[FleetEntry]:
         """Entries by predicted Rmax, best first (the predicted list)."""
@@ -166,6 +198,32 @@ class FleetReport:
                 and e.published_tflops > 0]
         return statistics.median(errs) if errs else float("nan")
 
+    def run_manifest(self, path=None, **meta) -> str:
+        """One NDJSON run-manifest line for this fleet run (the per-run
+        artifact the campaign layer consumes, ``repro.obs`` §manifest):
+        machine/bucket/compile/error summary as ``meta``, the full
+        metrics snapshot when the run was instrumented.  With ``path``
+        the line is also appended to that NDJSON journal."""
+        from repro.obs import append_manifest, manifest_line
+        med, held = self.median_abs_err(), self.median_abs_err("test")
+        base = {
+            "machines": len(self.entries),
+            "bucket": list(self.bucket),
+            "compiles": self.compiles,
+            "n_skipped": len(self.skipped_rows),
+            "median_abs_err": None if med != med else med,
+            "heldout_median_abs_err": None if held != held else held,
+        }
+        if self.calibration is not None:
+            base["calibration_factors"] = dict(
+                sorted(self.calibration.factors.items()))
+        base.update(meta)
+        m = self.metrics if self.metrics is not None \
+            and getattr(self.metrics, "enabled", False) else None
+        if path is not None:
+            return append_manifest(path, "fleet_run", meta=base, metrics=m)
+        return manifest_line("fleet_run", meta=base, metrics=m)
+
     def to_dict(self) -> Dict:
         med, held = self.median_abs_err(), self.median_abs_err("test")
         d: Dict = {
@@ -179,6 +237,7 @@ class FleetReport:
         }
         if self.calibration is not None:
             d["calibration"] = self.calibration.to_dict()
+        d["n_skipped"] = len(self.skipped_rows)
         for pos, e in enumerate(self.ranked(), start=1):
             err = e.rel_err
             d["machines"].append({

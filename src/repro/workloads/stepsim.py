@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Dict, List, Sequence
 
 import jax
@@ -33,6 +34,7 @@ import numpy as np
 from jax.experimental import enable_x64
 
 from repro.core.fastsim import _pad_pow2
+from repro.obs.metrics import RATIO_BUCKETS, get_global_metrics
 
 
 @dataclasses.dataclass(frozen=True)
@@ -156,9 +158,30 @@ def sweep_step(params_list: Sequence[StepParams]) -> List[Dict]:
     if not prm_list:
         return []
     lanes = _pad_pow2(list(range(len(prm_list))))
+    m = get_global_metrics()
     with enable_x64(True):
         fn = _compiled()
+        if m.enabled:
+            pre, t0 = trace_count(), time.perf_counter()
         out = np.asarray(fn(_stack_step_params(prm_list, lanes)))
+        if m.enabled:
+            # same taxonomy as fastsim._record_dispatch, one shared
+            # "step" bucket (the step core is shape-monomorphic)
+            dt = time.perf_counter() - t0
+            misses = trace_count() - pre
+            if misses:
+                m.counter("stepsim.compile_misses", bucket="step").inc(
+                    misses)
+                m.histogram("stepsim.compile_wall_s",
+                            bucket="step").observe(dt)
+            else:
+                m.counter("stepsim.compile_hits", bucket="step").inc()
+                m.histogram("stepsim.dispatch_wall_s").observe(dt)
+            m.counter("stepsim.lanes_live").inc(len(prm_list))
+            m.counter("stepsim.lanes_padded").inc(
+                len(lanes) - len(prm_list))
+            m.histogram("stepsim.sweep_occupancy", RATIO_BUCKETS).observe(
+                len(prm_list) / len(lanes))
     return [_result(p, float(t))
             for p, t in zip(prm_list, out[:len(prm_list)])]
 

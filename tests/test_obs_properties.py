@@ -1,0 +1,105 @@
+"""Property tests for the metrics merge algebra (repro.obs).
+
+The fleet/shard aggregation story rests on snapshot merge being a
+commutative monoid (empty registry as identity): CI shards, serving
+replicas and fleet runs can be folded in any order, any grouping, and
+the dashboard sees one truth.  Hypothesis drives random instrument
+histories through snapshot -> JSON -> merge and checks:
+
+  * JSON round-trip is lossless (snapshot == from_json(to_json));
+  * merge is commutative and associative on snapshots;
+  * the empty snapshot is the merge identity;
+  * merged counters/histogram counts equal the sums of their parts.
+
+Runs under CI's hypothesis install; skipped locally when hypothesis is
+absent (the container does not ship it).
+"""
+import json
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.obs import MetricsRegistry, merge_snapshots  # noqa: E402
+
+NAMES = ["serve.requests", "engine.events", "fleet.machines", "lat"]
+LABELS = [{}, {"kind": "hpl"}, {"kind": "tf", "zone": "a"}]
+# one bounds tuple per histogram name so any two histories merge
+BOUNDS = {"lat": (0.001, 0.1, 1.0), "engine.events": (10.0, 100.0)}
+
+# integer-valued floats: exact in IEEE754, so float sums stay
+# associative and snapshot equality is exact (real metric values are
+# approximately-merged the same way, just without bit-exact equality)
+finite = st.integers(min_value=0, max_value=10**6).map(float)
+
+op = st.one_of(
+    st.tuples(st.just("counter"), st.sampled_from(NAMES),
+              st.sampled_from(LABELS), finite),
+    st.tuples(st.just("gauge"), st.sampled_from(NAMES),
+              st.sampled_from(LABELS), finite),
+    st.tuples(st.just("hist"), st.sampled_from(sorted(BOUNDS)),
+              st.sampled_from(LABELS), finite),
+)
+
+
+def build(ops):
+    m = MetricsRegistry()
+    for kind, name, labels, v in ops:
+        if kind == "counter":
+            m.counter(name, **labels).inc(v)
+        elif kind == "gauge":
+            m.gauge(name, **labels).set(v)
+        else:
+            m.histogram(name, buckets=BOUNDS[name], **labels).observe(v)
+    return m
+
+
+history = st.lists(op, max_size=30)
+
+
+@settings(max_examples=60, deadline=None)
+@given(history)
+def test_json_round_trip_is_lossless(ops):
+    m = build(ops)
+    back = MetricsRegistry.from_json(m.to_json())
+    assert back.snapshot() == m.snapshot()
+    assert json.loads(m.to_json()) == m.snapshot()
+
+
+@settings(max_examples=60, deadline=None)
+@given(history, history)
+def test_merge_commutes(ops_a, ops_b):
+    a, b = build(ops_a).snapshot(), build(ops_b).snapshot()
+    assert merge_snapshots(a, b) == merge_snapshots(b, a)
+
+
+@settings(max_examples=60, deadline=None)
+@given(history, history, history)
+def test_merge_is_associative(ops_a, ops_b, ops_c):
+    a, b, c = (build(o).snapshot() for o in (ops_a, ops_b, ops_c))
+    assert merge_snapshots(merge_snapshots(a, b), c) == \
+        merge_snapshots(a, merge_snapshots(b, c))
+
+
+@settings(max_examples=60, deadline=None)
+@given(history)
+def test_empty_snapshot_is_identity(ops):
+    a = build(ops).snapshot()
+    empty = MetricsRegistry().snapshot()
+    assert merge_snapshots(a, empty) == a
+    assert merge_snapshots(empty, a) == a
+
+
+@settings(max_examples=60, deadline=None)
+@given(history, history)
+def test_merged_totals_are_sums(ops_a, ops_b):
+    a, b = build(ops_a).snapshot(), build(ops_b).snapshot()
+    m = merge_snapshots(a, b)
+    for key, v in m["counters"].items():
+        assert v == pytest.approx(a["counters"].get(key, 0.0)
+                                  + b["counters"].get(key, 0.0))
+    for key, hv in m["histograms"].items():
+        ca = a["histograms"].get(key, {}).get("count", 0)
+        cb = b["histograms"].get(key, {}).get("count", 0)
+        assert hv["count"] == ca + cb
