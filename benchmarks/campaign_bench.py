@@ -1,0 +1,197 @@
+"""Campaign-layer benchmark: spec -> matrix -> batched execution.
+
+Three measurements:
+
+  * ``campaign.expand`` — pure planning throughput: a four-axis grid
+    spec expanded to its run matrix (no compiles, no simulation), in
+    cases/s.  Expansion must stay trivially cheap next to execution.
+  * ``campaign.grid_wave`` — the ISSUE's acceptance matrix (2 workload
+    families x 3 heterogeneous platforms x axes x faults x seeds)
+    through ``run_campaign``: runs/s plus the dispatch economy the
+    layer exists for, read off the obs compile counters.
+  * ``campaign.edition_study`` — the longitudinal TOP500 study (two
+    vendored editions, proxy-scaled fleet sweeps, per-fabric
+    calibration, drift report), end to end in machines/s.
+
+The CI gate (``--check``) is machine-speed independent: it fails when
+the *dispatch counts* drift from the committed baseline — if the grid
+wave ever stops costing one compiled sweep per model family, or the
+edition study stops costing one forced-bucket compile per cold edition,
+that is a batching regression no wall-clock tolerance should absorb.
+
+    PYTHONPATH=src python benchmarks/campaign_bench.py --json \
+        --out BENCH_campaign.json
+    PYTHONPATH=src python benchmarks/campaign_bench.py --check \
+        BENCH_campaign.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+#: dispatch-count keys the --check gate compares exactly
+GATED_KEYS = ("fastsim_dispatches", "stepsim_dispatches", "serve_sweeps")
+
+
+def _grid_spec(n_seeds):
+    from repro.campaign import CampaignSpec
+    from repro.faults import FaultSpec
+    return CampaignSpec.make(
+        "bench-grid",
+        workloads=["hpl", "transformer"],
+        platforms=["tpu-v5e-pod", "syn-torus-fugaku-4k",
+                   "syn-torus-bgq-8k"],
+        axes={"N": [1536, 1920]},
+        faults=[None, FaultSpec.straggler(rank=0, slowdown=1.5)],
+        seeds=list(range(n_seeds)))
+
+
+def _expand_spec():
+    """A wide planning-only spec (validated against the registry, never
+    executed): 4 axes x 3 platforms x faults x seeds."""
+    from repro.campaign import CampaignSpec
+    from repro.faults import FaultSpec
+    return CampaignSpec.make(
+        "bench-expand",
+        workloads=["hpl"],
+        platforms=["tpu-v5e-pod", "syn-torus-fugaku-4k",
+                   "syn-torus-bgq-8k"],
+        axes={"N": [1536, 1920, 2304], "nb": [128, 192],
+              "lookahead": [0, 1]},
+        faults=[None, FaultSpec.straggler(rank=0, slowdown=2.0)],
+        seeds=list(range(8)),
+        max_runs=10_000)
+
+
+def run(quick: bool = True):
+    from repro.campaign import expand, run_campaign
+    from repro.top500 import FleetTuning
+
+    rows = []
+
+    # ------------------------------------------------- pure expansion
+    spec = _expand_spec()
+    expand(spec)                                   # warm imports
+    reps = 5 if quick else 20
+    best = min(_timed(lambda: expand(spec)) for _ in range(reps))
+    n_cases = len(expand(spec).cases)
+    rows.append({
+        "name": "campaign.expand",
+        "us_per_call": best / n_cases * 1e6,
+        "cases_per_s": n_cases / best,
+        "derived": f"cases={n_cases};cases_per_s={n_cases / best:.0f}"})
+
+    # ---------------------------------------------- grid execution
+    grid = _grid_spec(2 if quick else 8)
+    run_campaign(grid)                             # warm compile caches
+    best_wall, best_res = None, None
+    for _ in range(3 if quick else 5):
+        t0 = time.perf_counter()
+        res = run_campaign(grid)
+        wall = time.perf_counter() - t0
+        if best_wall is None or wall < best_wall:
+            best_wall, best_res = wall, res
+    d = best_res.summary["meta"]["dispatches"]
+    n_runs = best_res.summary["meta"]["runs"]
+    rows.append({
+        "name": "campaign.grid_wave",
+        "us_per_call": best_wall / n_runs * 1e6,
+        "runs_per_s": n_runs / best_wall,
+        "dispatches": d,
+        "derived": f"runs={n_runs};runs_per_s={n_runs / best_wall:.0f};"
+                   f"fastsim={d['fastsim_dispatches']};"
+                   f"stepsim={d['stepsim_dispatches']};"
+                   f"sweeps={d['serve_sweeps']}"})
+
+    # ------------------------------------------------ edition study
+    from repro.campaign import edition_study_spec
+    study = edition_study_spec(["2020_06", "2020_11"],
+                               limit=10 if quick else 0)
+    tuning = FleetTuning(max_ranks=256, panels_cap=2048)
+    run_campaign(study, tuning=tuning)             # warm fleet bucket
+    t0 = time.perf_counter()
+    res = run_campaign(study, tuning=tuning)
+    wall = time.perf_counter() - t0
+    meta = res.summary["meta"]
+    n_machines = meta["fleet_runs"]
+    from repro.campaign import campaign_report
+    drift = campaign_report(res.records)["drift"]["common_machines"]
+    rows.append({
+        "name": "campaign.edition_study",
+        "us_per_call": wall / n_machines * 1e6,
+        "machines_per_s": n_machines / wall,
+        "dispatches": meta["dispatches"],
+        "derived": f"machines={n_machines};editions=2;"
+                   f"common={drift};"
+                   f"machines_per_s={n_machines / wall:.0f};"
+                   f"fastsim={meta['dispatches']['fastsim_dispatches']}"})
+    return rows
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def check(rows, baseline_path: str) -> int:
+    """CI gate: dispatch counts must match the committed baseline
+    exactly (batching economy is not allowed to drift); wall-clock
+    numbers are informational."""
+    base = {}
+    with open(baseline_path) as fh:
+        for line in fh:
+            line = line.strip()
+            if line:
+                r = json.loads(line)
+                base[r["name"]] = r
+    failures, gated = [], 0
+    for r in rows:
+        b = base.get(r["name"])
+        if b is None or "dispatches" not in r:
+            continue
+        gated += 1
+        now = {k: r["dispatches"].get(k) for k in GATED_KEYS}
+        ref = {k: b["dispatches"].get(k) for k in GATED_KEYS}
+        status = "OK" if now == ref else "REGRESSED"
+        print(f"{r['name']}: dispatches {now} vs baseline {ref} {status}")
+        if status == "REGRESSED":
+            failures.append(r["name"])
+    if failures:
+        print(f"FAIL: campaign dispatch economy drifted vs "
+              f"{baseline_path} on: {', '.join(failures)}")
+        return 1
+    print(f"campaign bench dispatch counts match baseline "
+          f"({gated} gated scenarios)")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", action="store_true")
+    ap.add_argument("--out", default=None,
+                    help="also write NDJSON rows to this file")
+    ap.add_argument("--check", default=None, metavar="BASELINE",
+                    help="exit nonzero if dispatch counts drifted vs "
+                         "this NDJSON baseline")
+    args = ap.parse_args()
+    rows = run(quick=not args.full)
+    lines = [json.dumps(r) for r in rows]
+    if args.json:
+        print("\n".join(lines))
+    else:
+        print("name,us_per_call,derived")
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']:.2f},\"{r['derived']}\"")
+    if args.out:
+        with open(args.out, "w") as fh:
+            fh.write("\n".join(lines) + "\n")
+    if args.check:
+        sys.exit(check(rows, args.check))
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,7 @@ MODULES = [
     "benchmarks.faults_bench",          # degraded fleet + hardened serve
     "benchmarks.engine_bench",          # DES hot loop vs frozen legacy
     "benchmarks.serve_bench",           # serving throughput + latency
+    "benchmarks.campaign_bench",        # campaign matrix + edition study
 ]
 
 # --smoke: the fast subset CI runs on every push so benchmark entry
@@ -46,6 +47,7 @@ SMOKE_MODULES = [
     "benchmarks.faults_bench",
     "benchmarks.engine_bench",
     "benchmarks.serve_bench",
+    "benchmarks.campaign_bench",
 ]
 
 

@@ -22,8 +22,9 @@ Simulation layers stay metrics-free unless opted in: hang a registry on
 runs are bit-identical to uninstrumented ones — the registry only
 observes.
 """
-from .export import (append_manifest, manifest_line, manifest_record,
-                     read_manifest, to_prometheus,
+from .export import (ManifestReadReport, append_manifest, manifest_line,
+                     manifest_record, read_manifest,
+                     read_manifest_report, to_prometheus,
                      validate_prometheus_text)
 from .metrics import (COUNT_BUCKETS, DEFAULT_LATENCY_BUCKETS, NULL_METRICS,
                       RATIO_BUCKETS, Counter, Gauge, Histogram,
@@ -36,4 +37,5 @@ __all__ = [
     "merge_snapshots", "get_global_metrics", "set_global_metrics",
     "global_metrics", "to_prometheus", "validate_prometheus_text",
     "manifest_record", "manifest_line", "append_manifest", "read_manifest",
+    "read_manifest_report", "ManifestReadReport",
 ]

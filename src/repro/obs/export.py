@@ -28,7 +28,8 @@ from typing import Any, Dict, List, Mapping, Optional, Tuple
 
 __all__ = ["to_prometheus", "validate_prometheus_text",
            "manifest_record", "manifest_line", "append_manifest",
-           "read_manifest"]
+           "read_manifest", "read_manifest_report",
+           "ManifestReadReport"]
 
 _NAME_SANITIZE = re.compile(r"[^a-zA-Z0-9_:]")
 _LABEL_SANITIZE = re.compile(r"[^a-zA-Z0-9_]")
@@ -222,12 +223,62 @@ def append_manifest(path, kind: str, *,
     return line
 
 
-def read_manifest(path) -> List[Dict[str, Any]]:
-    """Parse an NDJSON manifest file back into records."""
-    out = []
+class ManifestReadReport:
+    """What a lenient manifest read accepted and what it skipped:
+    ``records`` in file order, ``skipped`` as (1-based line, reason)
+    pairs — blank lines are ignored silently (NDJSON allows them),
+    corrupt lines (a journal torn by a killed run) are counted."""
+
+    def __init__(self, records: List[Dict[str, Any]],
+                 skipped: List[Tuple[int, str]]):
+        self.records = records
+        self.skipped = skipped
+
+    def __iter__(self):
+        return iter(self.records)
+
+    def __len__(self):
+        return len(self.records)
+
+
+def read_manifest_report(path, *, strict: bool = False
+                         ) -> ManifestReadReport:
+    """Parse an NDJSON manifest file, tolerating the damage a killed
+    run leaves behind.  Lenient mode (default) skips corrupt lines
+    with a per-line reason in ``report.skipped``; ``strict=True``
+    raises ``ValueError`` on the first one.  Blank lines are never an
+    error."""
+    records: List[Dict[str, Any]] = []
+    skipped: List[Tuple[int, str]] = []
     with open(path) as fh:
-        for line in fh:
+        for lineno, line in enumerate(fh, start=1):
             line = line.strip()
-            if line:
-                out.append(json.loads(line))
-    return out
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError as exc:
+                if strict:
+                    raise ValueError(
+                        f"read_manifest: {path}: line {lineno}: "
+                        f"{exc}") from exc
+                skipped.append((lineno, str(exc)))
+                continue
+            if not isinstance(rec, dict):
+                reason = (f"expected a JSON object, got "
+                          f"{type(rec).__name__}")
+                if strict:
+                    raise ValueError(f"read_manifest: {path}: line "
+                                     f"{lineno}: {reason}")
+                skipped.append((lineno, reason))
+                continue
+            records.append(rec)
+    return ManifestReadReport(records, skipped)
+
+
+def read_manifest(path, *, strict: bool = False) -> List[Dict[str, Any]]:
+    """Parse an NDJSON manifest file back into records.  Lenient by
+    default — blank and corrupt lines are skipped (use
+    :func:`read_manifest_report` to see what was dropped);
+    ``strict=True`` raises on the first corrupt line."""
+    return read_manifest_report(path, strict=strict).records

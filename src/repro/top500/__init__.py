@@ -19,8 +19,9 @@ Registry interop: ``bulk_register(infer_platforms(rows),
 namespace="top500")`` exposes an ingested list to everything that
 speaks platform names (serving, benchmarks) without touching built-ins.
 """
-from .rows import (ROW_SCHEMA_VERSION, ParseReport, Top500Row,
-                   load_sample, parse_top500, sample_list_path)
+from .rows import (ROW_SCHEMA_VERSION, SAMPLE_EDITIONS, ParseReport,
+                   Top500Row, list_sample_editions, load_sample,
+                   parse_top500, sample_list_path)
 from .infer import (ACCEL_PEAKS, CPU_FAMILIES, CPUFamilyRule,
                     FABRIC_FAMILIES, FabricFamilyRule, fabric_group,
                     infer_platform, infer_platforms, memory_sized_n)
@@ -31,8 +32,9 @@ from .calibrate import (CalibrationResult, DESCalibration,
                         calibrate_fleet)
 
 __all__ = [
-    "ROW_SCHEMA_VERSION", "ParseReport", "Top500Row", "load_sample",
-    "parse_top500", "sample_list_path",
+    "ROW_SCHEMA_VERSION", "SAMPLE_EDITIONS", "ParseReport", "Top500Row",
+    "list_sample_editions", "load_sample", "parse_top500",
+    "sample_list_path",
     "ACCEL_PEAKS", "CPU_FAMILIES", "CPUFamilyRule", "FABRIC_FAMILIES",
     "FabricFamilyRule", "fabric_group", "infer_platform",
     "infer_platforms", "memory_sized_n",

@@ -197,12 +197,30 @@ def parse_top500(source: Union[str, os.PathLike], *,
     return ParseReport(rows=rows, skipped=skipped)
 
 
-def sample_list_path() -> str:
-    """Path of the vendored ~50-row sample list (June-2020-era systems)."""
+#: vendored sample list editions, oldest first (the edition-drift
+#: studies in repro.campaign compare any pair of these)
+SAMPLE_EDITIONS: Tuple[str, ...] = ("2020_06", "2020_11")
+
+
+def list_sample_editions() -> List[str]:
+    return list(SAMPLE_EDITIONS)
+
+
+def sample_list_path(edition: str = "2020_06") -> str:
+    """Path of a vendored ~40-50-row sample list edition (default: the
+    June-2020-era list the original fleet demo used)."""
+    if edition not in SAMPLE_EDITIONS:
+        import difflib
+        close = difflib.get_close_matches(edition, SAMPLE_EDITIONS, n=3,
+                                          cutoff=0.5)
+        hint = (f"did you mean: {', '.join(close)}?" if close
+                else f"vendored: {', '.join(SAMPLE_EDITIONS)}")
+        raise ValueError(f"unknown sample edition {edition!r}; {hint}")
     return os.path.join(os.path.dirname(__file__), "data",
-                        "top500_sample_2020_06.csv")
+                        f"top500_sample_{edition}.csv")
 
 
-def load_sample(strict: bool = True) -> List[Top500Row]:
-    """The vendored sample list, parsed strictly (it must be clean)."""
-    return parse_top500(sample_list_path(), strict=strict).rows
+def load_sample(strict: bool = True,
+                edition: str = "2020_06") -> List[Top500Row]:
+    """A vendored sample list, parsed strictly (it must be clean)."""
+    return parse_top500(sample_list_path(edition), strict=strict).rows

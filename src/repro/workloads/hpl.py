@@ -27,8 +27,20 @@ class HPLFastModel(FastModel):
 
     @classmethod
     def sweep_models(cls, models: Sequence["HPLFastModel"]) -> List[dict]:
-        from repro.core.fastsim import sweep_hpl
-        return sweep_hpl([m.cfg for m in models], [m.params for m in models])
+        """One compiled program per wave: scenarios sharing a shape
+        bucket take ``sweep_hpl``'s grouped fast path; a wave that
+        mixes buckets (a campaign grid over heterogeneous platforms)
+        is forced into one shared bucket instead — the TOP500 fleet
+        trick, so the family costs one dispatch either way."""
+        from repro.core.fastsim import bucket_key, sweep_hpl
+        cfgs = [m.cfg for m in models]
+        prms = [m.params for m in models]
+        if len({bucket_key(c) for c in cfgs}) > 1:
+            bucket = (max(c.n_panels for c in cfgs),
+                      max(c.P for c in cfgs),
+                      max(c.Q for c in cfgs))
+            return sweep_hpl(cfgs, prms, bucket=bucket)
+        return sweep_hpl(cfgs, prms)
 
 
 @register_workload

@@ -520,3 +520,55 @@ def test_predict_top500_counts_rows(tmp_path):
     assert c["fleet.rows_parsed"] == 1.0
     assert c["fleet.rows_skipped"] == 1.0
     assert len(report.entries) == 1
+
+
+# ------------------- manifest read hardening (campaign satellite)
+
+def _torn_journal(tmp_path):
+    """Two good lines, a blank, a non-object, and a torn tail — the
+    shape a killed campaign run leaves behind."""
+    from repro.obs.export import manifest_line
+    path = tmp_path / "torn.ndjson"
+    path.write_text(manifest_line("run", meta={"i": 0}) + "\n"
+                    "\n"
+                    + manifest_line("run", meta={"i": 1}) + "\n"
+                    '["not", "an", "object"]\n'
+                    '{"kind": "run", "meta": {"i": 2')
+    return path
+
+
+def test_read_manifest_lenient_skips_with_count(tmp_path):
+    from repro.obs import read_manifest_report
+    report = read_manifest_report(_torn_journal(tmp_path))
+    assert [r["meta"]["i"] for r in report.records] == [0, 1]
+    assert len(report) == 2 and list(report) == report.records
+    # blank lines are never an error; the two corrupt lines are
+    # counted with their 1-based line numbers and a reason each
+    assert [lineno for lineno, _ in report.skipped] == [4, 5]
+    assert "expected a JSON object" in report.skipped[0][1]
+
+
+def test_read_manifest_lenient_list_form_unchanged(tmp_path):
+    recs = read_manifest(_torn_journal(tmp_path))
+    assert isinstance(recs, list) and len(recs) == 2
+
+
+def test_read_manifest_strict_raises_with_location(tmp_path):
+    path = _torn_journal(tmp_path)
+    with pytest.raises(ValueError, match=r"line 4: expected a JSON "
+                                         r"object, got list"):
+        read_manifest(path, strict=True)
+    from repro.obs.export import manifest_line
+    clean = tmp_path / "clean.ndjson"
+    clean.write_text(manifest_line("run", meta={"i": 0}) + "\n"
+                     + manifest_line("run", meta={"i": 1}) + "\n")
+    assert len(read_manifest(clean, strict=True)) == 2
+
+
+def test_read_manifest_empty_and_blank_files(tmp_path):
+    empty = tmp_path / "empty.ndjson"
+    empty.write_text("")
+    blank = tmp_path / "blank.ndjson"
+    blank.write_text("\n\n\n")
+    for p in (empty, blank):
+        assert read_manifest(p, strict=True) == []

@@ -399,3 +399,42 @@ def test_predict_platforms_empty_sequence_is_a_noop():
     assert svc.predict_platforms([]) == {}
     assert svc.stats == {"requests": 0, "batches": 0, "scenarios": 0,
                          "traces": 0, "des_breakdowns": 0}
+
+
+# ----------------------- vendored edition set (campaign satellite)
+
+def test_second_vendored_edition_parses_clean():
+    from repro.top500 import list_sample_editions
+    assert list_sample_editions() == ["2020_06", "2020_11"]
+    rows = load_sample(edition="2020_11")     # strict: must be clean
+    assert len(rows) >= 40
+    ranks = [r.rank for r in rows]
+    assert ranks == sorted(ranks) and len(set(ranks)) == len(ranks)
+    for r in rows:
+        assert 0 < r.rmax_tflops <= r.rpeak_tflops
+        assert r.cpu_cores > 0 and r.processor and r.interconnect
+
+
+def test_editions_share_machines_and_record_upgrades():
+    june = {r.system: r for r in load_sample(edition="2020_06")}
+    nov = {r.system: r for r in load_sample(edition="2020_11")}
+    common = set(june) & set(nov)
+    assert len(common) >= 30                  # slug-matched drift basis
+    # the Nov list records Fugaku's expansion and Selene's doubling
+    assert nov["Fugaku"].rmax_tflops > june["Fugaku"].rmax_tflops
+    assert nov["Selene"].cores == 2 * june["Selene"].cores
+    assert "JUWELS Booster Module" in set(nov) - set(june)
+    assert "K computer" in set(june) - set(nov)
+    # every Nov row infers a platform (no new vocab fell outside the
+    # CPU/fabric family rules)
+    plats = infer_platforms(nov.values())
+    assert len(plats) == len(nov)
+
+
+def test_unknown_sample_edition_hints_close_match():
+    with pytest.raises(ValueError,
+                       match=r"unknown sample edition '2020_12'; did "
+                             r"you mean: 2020_11"):
+        sample_list_path("2020_12")
+    with pytest.raises(ValueError, match=r"vendored: 2020_06, 2020_11"):
+        sample_list_path("1993")
