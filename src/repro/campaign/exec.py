@@ -83,7 +83,8 @@ def dispatch_counts(snapshot: Dict[str, Any]) -> Dict[str, int]:
     criterion is asserted against."""
     out = {"fastsim_compiles": 0, "fastsim_dispatches": 0,
            "stepsim_compiles": 0, "stepsim_dispatches": 0,
-           "serve_sweeps": 0}
+           "serve_sweeps": 0, "cache_hits": 0, "cache_misses": 0,
+           "coalesced": 0}
     for key, val in snapshot.get("counters", {}).items():
         name, _ = parse_key(key)
         if name == "fastsim.compile_misses":
@@ -98,16 +99,24 @@ def dispatch_counts(snapshot: Dict[str, Any]) -> Dict[str, int]:
             out["stepsim_dispatches"] += int(val)
         elif name == "serve.sweeps":
             out["serve_sweeps"] += int(val)
+        elif name == "serve.cache_hits":
+            out["cache_hits"] += int(val)
+        elif name == "serve.cache_misses":
+            out["cache_misses"] += int(val)
+        elif name == "serve.coalesced":
+            out["coalesced"] += int(val)
     return out
 
 
 def _grid_result_payload(out: Optional[dict]) -> Optional[dict]:
     """The journaled slice of a grid result: everything the sweep
-    computed, minus wall-clock fields and the (trace-sized) breakdown."""
+    computed, minus wall-clock fields, the (trace-sized) breakdown, and
+    the ``cached`` provenance stamp (a warm-cache re-run must journal
+    byte-equal ``campaign_run`` lines)."""
     if out is None:
         return None
     return {k: v for k, v in out.items()
-            if k not in _TIMING_KEYS and k != "breakdown"}
+            if k not in _TIMING_KEYS and k not in ("breakdown", "cached")}
 
 
 def _fleet_entry_payload(entry) -> dict:
@@ -127,20 +136,36 @@ def _fleet_entry_payload(entry) -> dict:
 
 def run_campaign(spec: CampaignSpec, *, journal=None, metrics=None,
                  tuning=None, calibrate: bool = True,
-                 max_batch: int = 256,
-                 strict: bool = False) -> CampaignResult:
+                 max_batch: int = 256, strict: bool = False,
+                 service=None, cache=None) -> CampaignResult:
     """Execute a campaign end to end; see the module docstring for the
     batching/journaling contract.
 
     ``journal`` — path to append NDJSON lines to as they are produced.
-    ``metrics`` — a shared ``MetricsRegistry`` (default: fresh).
+    ``metrics`` — a shared ``MetricsRegistry`` (default: fresh, or the
+    service's registry when ``service=`` is given).
     ``tuning``/``calibrate`` — forwarded to ``predict_fleet``.
     ``strict`` — grid resolution errors raise instead of being isolated
     into per-run ``{"status": "error"}`` records.
+    ``service`` — a caller-held ``PredictionService`` to route grid
+    cases through; re-running an identical campaign against a warm
+    cached service is all-hits with byte-equal ``campaign_run`` lines.
+    ``cache`` — forwarded to the internally-built service when
+    ``service`` is not given (True/int/ResultCache, see ``repro.serve``).
+
+    The summary's ``dispatches`` are deltas over this campaign (counter
+    totals at entry are subtracted), so shared registries and reused
+    services report per-campaign compile economy, not lifetime totals.
     """
     from repro.serve import PredictionService, WorkloadRequest
 
-    registry = MetricsRegistry() if metrics is None else metrics
+    if metrics is None:
+        registry = service.metrics if service is not None \
+            else MetricsRegistry()
+    else:
+        registry = metrics
+    counts_start = dispatch_counts(
+        registry.snapshot() if registry.enabled else {})
     matrix = expand(spec, strict=strict)
     records: List[Dict[str, Any]] = []
     t_start = time.perf_counter()
@@ -158,7 +183,8 @@ def run_campaign(spec: CampaignSpec, *, journal=None, metrics=None,
         # ------------------------------------------------- grid cases
         grid = matrix.grid_cases
         if grid:
-            svc = PredictionService(max_batch=max_batch, metrics=registry)
+            svc = service if service is not None else PredictionService(
+                max_batch=max_batch, metrics=registry, cache=cache)
             reqs = [WorkloadRequest(rid=c.index, workload=c.workload,
                                     platform=matrix.platforms[c.platform],
                                     faults=c.fault)
@@ -207,7 +233,8 @@ def run_campaign(spec: CampaignSpec, *, journal=None, metrics=None,
         "grid_runs": len(matrix.grid_cases),
         "fleet_runs": len(matrix.fleet_cases),
         "skipped": [list(kv) for kv in matrix.skipped],
-        "dispatches": dispatch_counts(snap),
+        "dispatches": {k: v - counts_start.get(k, 0)
+                       for k, v in dispatch_counts(snap).items()},
         "editions": editions_meta,
         "wall_s": wall_s,                 # the one timing field
     }

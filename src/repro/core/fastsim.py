@@ -26,6 +26,7 @@ see ``calibrate.fit_fastsim_params`` for gradient-based calibration.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import math
@@ -297,6 +298,69 @@ def _sim_core(N, nb, P, Q, prm: FastSimParams,
     return total
 
 
+# ------------------------------------------------------- lane sharding
+# Device-sharded batch dispatch (DESIGN.md §20): the sweep engine's
+# trailing/leading scenario axis is embarrassingly parallel (every lane
+# is an independent recurrence), so when more than one local device is
+# available the padded lane axis can be split across them.  Off by
+# default; the single-device (or indivisible-batch) fallback takes the
+# exact pre-sharding code path, so results are bitwise-identical to an
+# unsharded dispatch by construction.
+_LANE_SHARDING = False
+
+
+def set_lane_sharding(enabled: bool) -> bool:
+    """Enable/disable device-sharded sweep dispatch; returns the
+    previous setting (for restoration)."""
+    global _LANE_SHARDING
+    prev = _LANE_SHARDING
+    _LANE_SHARDING = bool(enabled)
+    return prev
+
+
+@contextlib.contextmanager
+def lane_sharding(enabled: bool = True):
+    """Scoped ``set_lane_sharding`` — the serving layer wraps a wave's
+    family dispatches in this context when ``shard=True``."""
+    prev = set_lane_sharding(enabled)
+    try:
+        yield
+    finally:
+        set_lane_sharding(prev)
+
+
+def shard_device_count() -> int:
+    """How many local devices a sharded dispatch would split over."""
+    return len(jax.devices())
+
+
+def _shard_lanes(n_lanes: int, *trees):
+    """Place ``(B,)``-leading pytrees across local devices along the
+    lane axis.  Returns ``(trees, sharded)``; identity (and False) when
+    sharding is off, only one device exists, or the padded batch does
+    not divide the device count — the single-device fallback that keeps
+    results bitwise-identical to the unsharded path."""
+    if not _LANE_SHARDING:
+        return trees, False
+    devs = jax.devices()
+    if len(devs) <= 1 or n_lanes % len(devs):
+        return trees, False
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec
+    mesh = Mesh(np.asarray(devs), ("lanes",))
+    sharding = NamedSharding(mesh, PartitionSpec("lanes"))
+
+    def put(x):
+        return jax.device_put(jnp.asarray(x), sharding)
+
+    return tuple(jax.tree_util.tree_map(put, t) for t in trees), True
+
+
+def _record_shard(m, sharded: bool, prefix: str = "fastsim") -> None:
+    if m.enabled and sharded:
+        m.counter(f"{prefix}.sharded_dispatches").inc()
+        m.gauge(f"{prefix}.shard_devices").set(shard_device_count())
+
+
 # --------------------------------------------------------- compile cache
 _TRACE_COUNT = 0
 
@@ -450,13 +514,16 @@ def sweep_hpl(configs: Configs, params: Params, *,
                 continue
             lanes = _pad_pow2(idxs)
             fn = _compiled(*key, "params")
+            (stacked,), sharded = _shard_lanes(
+                len(lanes), _stack_params(prm_list, lanes))
             if m.enabled:
                 pre, t0 = trace_count(), time.perf_counter()
             out = np.asarray(fn(np.int64(N), np.int64(nb), np.int64(P),
-                                np.int64(Q), _stack_params(prm_list, lanes)))
+                                np.int64(Q), stacked))
             if m.enabled:
                 _record_dispatch(m, key, pre, time.perf_counter() - t0,
                                  len(idxs), len(lanes))
+                _record_shard(m, sharded)
             times[idxs] = out[:len(idxs)]
         for key, idxs in mixed.items():
             if len(idxs) == 1:
@@ -468,13 +535,16 @@ def sweep_hpl(configs: Configs, params: Params, *,
                                 cfg_list[i].P, cfg_list[i].Q]
                                for i in lanes], np.int64)
             fn = _compiled(*key, "batch")
+            args, sharded = _shard_lanes(
+                len(lanes), geom[:, 0], geom[:, 1], geom[:, 2], geom[:, 3],
+                _stack_params(prm_list, lanes))
             if m.enabled:
                 pre, t0 = trace_count(), time.perf_counter()
-            out = np.asarray(fn(geom[:, 0], geom[:, 1], geom[:, 2],
-                                geom[:, 3], _stack_params(prm_list, lanes)))
+            out = np.asarray(fn(*args))
             if m.enabled:
                 _record_dispatch(m, key, pre, time.perf_counter() - t0,
                                  len(idxs), len(lanes))
+                _record_shard(m, sharded)
             times[idxs] = out[:len(idxs)]
     return [_result(cfg, float(t)) for cfg, t in zip(cfg_list, times)]
 
@@ -500,13 +570,16 @@ def _sweep_forced_bucket(cfg_list: Sequence[HPLConfig],
     m = get_global_metrics()
     with enable_x64(True):
         fn = _compiled(n_panels_max, P_max, Q_max, "batch")
+        args, sharded = _shard_lanes(
+            len(lanes), geom[:, 0], geom[:, 1], geom[:, 2], geom[:, 3],
+            _stack_params(prm_list, lanes))
         if m.enabled:
             pre, t0 = trace_count(), time.perf_counter()
-        out = np.asarray(fn(geom[:, 0], geom[:, 1], geom[:, 2], geom[:, 3],
-                            _stack_params(prm_list, lanes)))
+        out = np.asarray(fn(*args))
         if m.enabled:
             _record_dispatch(m, (n_panels_max, P_max, Q_max), pre,
                              time.perf_counter() - t0, len(cfg_list),
                              len(lanes))
+            _record_shard(m, sharded)
     return [_result(cfg, float(t))
             for cfg, t in zip(cfg_list, out[:len(cfg_list)])]

@@ -21,6 +21,15 @@ Simulation layers stay metrics-free unless opted in: hang a registry on
 (fastsim / stepsim compile-cache and sweep-lane metrics).  Instrumented
 runs are bit-identical to uninstrumented ones — the registry only
 observes.
+
+Serving-throughput metric families (DESIGN.md §20; all land in
+snapshots, Prometheus text, and manifests like every other instrument):
+``serve.cache_hits`` / ``serve.cache_misses`` / ``serve.coalesced``
+count result-cache effectiveness, ``serve.cache_entries`` /
+``serve.cache_occupancy`` gauge its fill level, ``serve.warm_compiles``
+/ ``serve.warm_dispatches`` account the warm pool, and
+``fastsim.sharded_dispatches`` / ``stepsim.sharded_dispatches`` (plus
+``*.shard_devices`` gauges) record device-sharded sweep dispatches.
 """
 from .export import (ManifestReadReport, append_manifest, manifest_line,
                      manifest_record, read_manifest,

@@ -12,14 +12,14 @@ path never drags in jax through this package's import.
 """
 from .spec import (FabricSpec, MPIStackSpec, NodeSpec, Platform,
                    ScaleSpec)
-from .registry import (bulk_register, get_platform, list_platforms,
-                       register, unregister)
+from .registry import (add_invalidation_hook, bulk_register,
+                       get_platform, list_platforms, register, unregister)
 from .build import DESStack, build_des, build_fastsim, build_ici, \
     build_node, build_topology
 
 __all__ = ["FabricSpec", "MPIStackSpec", "NodeSpec", "Platform",
            "ScaleSpec", "get_platform", "list_platforms", "register",
-           "bulk_register", "unregister",
+           "bulk_register", "unregister", "add_invalidation_hook",
            "DESStack", "build_des", "build_fastsim", "build_ici",
            "build_node", "build_topology", "fit_fastsim_to_des", "des_probe_runs",
            "BridgeFit"]

@@ -17,17 +17,39 @@ from __future__ import annotations
 
 import dataclasses
 import difflib
-from typing import Dict, Iterable, List, Sequence
+from typing import Callable, Dict, Iterable, List, Sequence
 
 from .spec import FabricSpec, MPIStackSpec, NodeSpec, Platform, ScaleSpec
 
 _REGISTRY: Dict[str, Platform] = {}
 
+#: callbacks fired with a platform *name* whenever that name's binding
+#: changes (overwrite re-registration or unregistration) — the serving
+#: layer's result caches subscribe here to drop entries derived from
+#: the name (repro.serve.cache; layering stays serve -> platforms)
+_INVALIDATION_HOOKS: List[Callable[[str], None]] = []
+
+
+def add_invalidation_hook(fn: Callable[[str], None]) -> None:
+    """Subscribe to name-rebinding events; ``fn(name)`` is called after
+    an existing registration is overwritten or removed (idempotent —
+    the same callable is only installed once)."""
+    if fn not in _INVALIDATION_HOOKS:
+        _INVALIDATION_HOOKS.append(fn)
+
+
+def _notify_rebound(name: str) -> None:
+    for fn in list(_INVALIDATION_HOOKS):
+        fn(name)
+
 
 def register(platform: Platform, *, overwrite: bool = False) -> Platform:
     if not overwrite and platform.name in _REGISTRY:
         raise ValueError(f"platform {platform.name!r} already registered")
+    rebound = platform.name in _REGISTRY
     _REGISTRY[platform.name] = platform
+    if rebound:
+        _notify_rebound(platform.name)
     return platform
 
 
@@ -57,7 +79,10 @@ def bulk_register(platforms: Iterable[Platform], *, namespace: str,
             raise ValueError(f"bulk_register: {p.name!r} already "
                              "registered (pass overwrite=True to replace)")
     for p in renamed:
+        rebound = p.name in _REGISTRY
         _REGISTRY[p.name] = p
+        if rebound:
+            _notify_rebound(p.name)
     return renamed
 
 
@@ -65,7 +90,8 @@ def unregister(names: Sequence[str]) -> None:
     """Remove registered names (missing ones are ignored) — the cleanup
     companion to ``bulk_register`` for tests and re-ingestion."""
     for name in names:
-        _REGISTRY.pop(name, None)
+        if _REGISTRY.pop(name, None) is not None:
+            _notify_rebound(name)
 
 
 def get_platform(name: str) -> Platform:

@@ -39,6 +39,11 @@ class ServeEngine:
         self.max_len = max_len
         self.greedy = greedy
         self._decode = jax.jit(self.model.decode, donate_argnums=(1,))
+        # one persistent jit wrapper — the compile cache is keyed on the
+        # function object, so wrapping per request would retrace every
+        # prefill instead of only once per prompt-length bucket
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill(p, b, max_len=self.max_len))
         self._queue: List[Request] = []
         self.stats = {"prefills": 0, "decode_steps": 0, "tokens_out": 0}
 
@@ -56,11 +61,27 @@ class ServeEngine:
         if self.cfg.family == "vlm":
             batch["image_embeds"] = jnp.zeros(
                 (1, self.cfg.n_image_tokens, self.cfg.d_model), jnp.float32)
-        cache, logits = jax.jit(
-            lambda p, b: self.model.prefill(p, b, max_len=self.max_len)
-        )(self.params, batch)
+        cache, logits = self._prefill(self.params, batch)
         first = int(jnp.argmax(logits[0, :self.cfg.vocab_size]))
         return cache, first
+
+    def warm(self, prompt_lens) -> Dict[str, int]:
+        """Precompile prefill + decode for each prompt-length bucket by
+        running a tiny throwaway request through the real serving path
+        (compile caches are keyed on shapes, so a later real request of
+        the same length pays zero compiles).  Warm traffic is real
+        traffic and counts in ``stats``."""
+        if isinstance(prompt_lens, int):
+            prompt_lens = [prompt_lens]
+        lens = sorted({int(n) for n in prompt_lens})
+        before = dict(self.stats)
+        for i, n in enumerate(lens):
+            self.run([Request(rid=-1 - i, prompt=np.zeros(n, np.int32),
+                              max_new_tokens=2)])
+        return {"buckets": len(lens),
+                "prefills": self.stats["prefills"] - before["prefills"],
+                "decode_steps": (self.stats["decode_steps"]
+                                 - before["decode_steps"])}
 
     def run(self, requests: List[Request]) -> Dict[int, List[int]]:
         """Serve a list of requests to completion (batched decode).

@@ -53,6 +53,22 @@ above is the default):
     (``repro.faults``): folded into the fast model's params and, for
     breakdown requests, injected into the DES.
 
+Production throughput (all opt-in; DESIGN.md §20):
+
+  * ``PredictionService(cache=True)`` attaches a content-addressed
+    result cache (``repro.serve.cache``): repeat scenarios are served
+    from the cache (stamped ``cached=True``) and duplicate in-flight
+    keys within a wave coalesce onto one dispatched leader.  Budgeted
+    (``timeout_s``) requests and error/degraded results are never
+    cached.
+  * ``PredictionService(shard=True)`` splits each family sweep's padded
+    lane axis across local devices; with one device (or an indivisible
+    batch) it falls back to the exact unsharded code path.
+  * ``svc.warm(workloads, platforms, count=...)`` (or ``python -m
+    repro.serve warm``) precompiles the sweep buckets a traffic mix
+    will need, so the first real wave pays zero compiles — verified by
+    the §18 compile hit/miss counters.
+
 Observability (``repro.obs``, DESIGN.md §18): both services carry a
 ``MetricsRegistry`` (``svc.metrics``; pass ``metrics=NULL_METRICS`` to
 switch it off, or share one registry across services/replicas — they
@@ -75,12 +91,15 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import weakref
 from typing import Any, Dict, List, Mapping, Optional, Sequence
 
 from repro.core.apps.hpl import HPLConfig
 from repro.core.engine import SimWallDeadline
-from repro.core.fastsim import FastSimParams, sweep_hpl, trace_count
+from repro.core.fastsim import (FastSimParams, lane_sharding, sweep_hpl,
+                                trace_count)
 from repro.obs import COUNT_BUCKETS, MetricsRegistry, manifest_line
+from repro.serve.cache import as_result_cache, copy_payload, request_key
 
 
 @dataclasses.dataclass
@@ -114,9 +133,33 @@ class WorkloadRequest:
     result: Optional[dict] = None
     _bound: Any = dataclasses.field(default=None, repr=False)
     #        ^ (workload, platform, fastmodel), set by _resolve
+    _ckey: Optional[str] = dataclasses.field(default=None, repr=False)
+    #        ^ content-addressed cache key, set at flush time (None when
+    #        the cache is off or the request is uncacheable)
     _deadline: Optional[float] = dataclasses.field(default=None, repr=False)
     _fallback: Optional[str] = dataclasses.field(default=None, repr=False)
     _t_submit: Optional[float] = dataclasses.field(default=None, repr=False)
+
+
+#: live services, for registry-driven resolution-memo invalidation
+_LIVE_SERVICES: "weakref.WeakSet" = weakref.WeakSet()
+_RESOLUTION_HOOK_INSTALLED = False
+
+
+def _install_resolution_hook() -> None:
+    """Idempotently subscribe to platform re-registration so every live
+    service forgets memoized resolutions of the re-registered name."""
+    global _RESOLUTION_HOOK_INSTALLED
+    if _RESOLUTION_HOOK_INSTALLED:
+        return
+    from repro.platforms.registry import add_invalidation_hook
+
+    def _on_rebound(name: str) -> None:
+        for svc in list(_LIVE_SERVICES):
+            svc._drop_resolution_memo(name)
+
+    add_invalidation_hook(_on_rebound)
+    _RESOLUTION_HOOK_INSTALLED = True
 
 
 class PredictionService:
@@ -131,7 +174,8 @@ class PredictionService:
     def __init__(self, max_batch: int = 256, max_des_ranks: int = 1024,
                  max_region_ranks: int = 16384,
                  retries: int = 2, backoff_s: float = 0.05,
-                 metrics: Any = None):
+                 metrics: Any = None, cache: Any = None,
+                 shard: bool = False):
         self.max_batch = max_batch
         self.max_des_ranks = max_des_ranks
         self.max_region_ranks = max_region_ranks
@@ -140,16 +184,52 @@ class PredictionService:
         self._queue: List[WorkloadRequest] = []
         self.stats = {"requests": 0, "batches": 0, "scenarios": 0,
                       "sweeps": 0, "des_breakdowns": 0, "retries": 0,
-                      "fallbacks": 0, "errors": 0}
+                      "fallbacks": 0, "errors": 0, "cache_hits": 0,
+                      "cache_misses": 0, "coalesced": 0}
         #: on by default (a fresh registry); pass NULL_METRICS to opt
         #: out or a shared registry to aggregate across services
         self.metrics = MetricsRegistry() if metrics is None else metrics
+        #: off by default — the strict recompute-everything contract of
+        #: PRs 4-8 is the default.  True / an int / a ResultCache turn
+        #: on content-addressed result caching + request coalescing
+        #: (share one ResultCache across services to share results).
+        self.cache = as_result_cache(cache)
+        #: off by default — True shards each family sweep's padded lane
+        #: axis across local devices (single-device fallback is bitwise-
+        #: identical to the unsharded path)
+        self.shard = bool(shard)
+        #: (workload, params, platform, faults) -> (wl, plat, model);
+        #: name-level resolutions are pure, so repeat traffic skips the
+        #: spec/model rebuild (the dominant per-request Python cost).
+        #: Entries derived from a registry name are dropped when that
+        #: name is re-registered (see _install_resolution_hook).
+        self._resolve_memo: Dict[tuple, tuple] = {}
+        _LIVE_SERVICES.add(self)
+        _install_resolution_hook()
 
-    def _resolve(self, req: WorkloadRequest) -> None:
-        """Bind names to specs and build the fast model; idempotent, and
-        every error surfaces here (before anything is enqueued)."""
-        if req._bound is not None:
-            return
+    def _drop_resolution_memo(self, name: str) -> None:
+        """Registry rebinding event: forget memoized resolutions of
+        platform ``name`` so the next request re-reads the registry."""
+        self._resolve_memo = {k: v for k, v in self._resolve_memo.items()
+                              if k[2] != name}
+
+    @staticmethod
+    def _memo_key(req: WorkloadRequest) -> Optional[tuple]:
+        """Hashable identity of a name-level resolution, or None when
+        the request carries instances/unhashables (resolved fresh)."""
+        if not (isinstance(req.workload, str)
+                and isinstance(req.platform, str)):
+            return None
+        try:
+            key = (req.workload, tuple(sorted(req.params.items())),
+                   req.platform, req.faults)
+            hash(key)            # tuples build fine around list params;
+            return key           # only hashing surfaces the TypeError
+        except TypeError:        # unhashable param value / fault dict
+            return None
+
+    def _bind(self, req: WorkloadRequest) -> tuple:
+        """Build (workload, platform, fastmodel) for one request."""
         from repro.workloads import (Workload, WorkloadSpec, get_workload,
                                      workload_from_spec)
         wl = req.workload
@@ -172,6 +252,23 @@ class PredictionService:
             from repro.platforms import get_platform
             plat = get_platform(plat)
         wl.validate(plat)
+        return (wl, plat, wl.fastsim_model(plat, faults=req.faults))
+
+    def _resolve(self, req: WorkloadRequest) -> None:
+        """Bind names to specs and build the fast model; idempotent, and
+        every error surfaces here (before anything is enqueued)."""
+        if req._bound is not None:
+            return
+        memo_key = self._memo_key(req)
+        bound = (self._resolve_memo.get(memo_key)
+                 if memo_key is not None else None)
+        if bound is None:
+            bound = self._bind(req)
+            if memo_key is not None:
+                if len(self._resolve_memo) >= 4096:
+                    self._resolve_memo.clear()
+                self._resolve_memo[memo_key] = bound
+        wl, plat, _ = bound
         if req.breakdown:
             # region requests simulate only a representative slice of the
             # iteration space, so they get the (much higher) region guard
@@ -191,7 +288,7 @@ class PredictionService:
                         f"{guard}; pass a scaled-down scenario"
                         + ("" if req.regions is not None else
                            " or a regions= request"))
-        req._bound = (wl, plat, wl.fastsim_model(plat, faults=req.faults))
+        req._bound = bound
 
     def submit(self, req: WorkloadRequest) -> None:
         self._resolve(req)
@@ -204,13 +301,29 @@ class PredictionService:
             self.metrics.counter("serve.requests").inc()
             self.metrics.gauge("serve.queue_depth").set(len(self._queue))
 
+    def _cache_key(self, req: WorkloadRequest) -> Optional[str]:
+        """Content-addressed key of a resolved request, or None when it
+        is uncacheable.  Budgeted requests (``timeout_s``) can degrade
+        nondeterministically under wall pressure, so they are never
+        cached (which also keeps every rank-guard/deadline fallback out
+        of the cache — degraded answers are always recomputed)."""
+        if req.timeout_s is not None:
+            return None
+        wl, plat, _ = req._bound
+        return request_key(wl.spec, plat, faults=req.faults,
+                           regions=req.regions, breakdown=req.breakdown)
+
     def _dispatch(self, model_cls, reqs: List[WorkloadRequest]) -> List[dict]:
         """One batched sweep per family, with bounded retry + exponential
-        backoff for transient backend errors."""
+        backoff for transient backend errors.  With ``shard=True`` the
+        sweep's padded lane axis is split across local devices."""
         models = [r._bound[2] for r in reqs]
         delay = self.backoff_s
         for attempt in range(self.retries + 1):
             try:
+                if self.shard:
+                    with lane_sharding(True):
+                        return model_cls.sweep_models(models)
                 return model_cls.sweep_models(models)
             except self.TRANSIENT:
                 if attempt == self.retries:
@@ -272,19 +385,41 @@ class PredictionService:
                 "serve.deadline_fallbacks" if kind == "deadline"
                 else "serve.rank_guard_trips").inc()
 
+    def _finish(self, req: WorkloadRequest, out: dict,
+                results: Dict[int, dict]) -> None:
+        """Attach one answered result to its request + the result map
+        and record the request's latency."""
+        req.result = out
+        results[req.rid] = out
+        m = self.metrics
+        if m.enabled and req._t_submit is not None:
+            m.histogram("serve.request_latency_s").observe(
+                time.perf_counter() - req._t_submit)
+
     def flush(self) -> Dict[int, dict]:
         """Drain the queue in waves of up to ``max_batch`` scenarios;
         each wave groups requests by workload family and runs ONE
         ``sweep_models`` dispatch per family.  Returns {rid: result}.
 
+        With a cache attached, each wave is first partitioned: requests
+        whose content-addressed key is already cached are served
+        immediately (stamped ``cached=True``); duplicate in-flight keys
+        coalesce onto one *leader* per key (the only one dispatched) and
+        the followers receive deep copies of the leader's result.
+        Uncacheable requests (``timeout_s`` budgets, which can degrade
+        nondeterministically) always take the dispatch path, and error
+        results are never inserted into the cache.
+
         Dispatch is all-or-nothing per wave: every family's sweep runs
         before any result is attached.  If one family's dispatch fails
-        (after retries), every request in the wave is stamped with a
-        ``{"status": "error", ...}`` result, the exception re-raises,
-        and the queue keeps only the requests behind the wave — the
-        service stays reusable with a clean queue."""
+        (after retries), every not-yet-served request in the wave is
+        stamped with a ``{"status": "error", ...}`` result, the
+        exception re-raises, and the queue keeps only the requests
+        behind the wave — the service stays reusable with a clean queue
+        (cache hits served before the failure keep their good results)."""
         results: Dict[int, dict] = {}
         m = self.metrics
+        cache = self.cache
         while self._queue:
             wave = self._queue[:self.max_batch]
             del self._queue[:self.max_batch]
@@ -292,8 +427,36 @@ class PredictionService:
                 m.histogram("serve.wave_size", COUNT_BUCKETS).observe(
                     len(wave))
                 m.gauge("serve.queue_depth").set(len(self._queue))
+            to_dispatch: List[WorkloadRequest] = []
+            followers: Dict[str, List[WorkloadRequest]] = {}
+            served_ids: set = set()
+            if cache is None:
+                to_dispatch = list(wave)
+            else:
+                leaders: Dict[str, WorkloadRequest] = {}
+                for req in wave:
+                    req._ckey = key = self._cache_key(req)
+                    if key is None:               # uncacheable: dispatch
+                        to_dispatch.append(req)
+                        continue
+                    hit = cache.get(key)
+                    if hit is not None:
+                        hit["cached"] = True      # provenance stamp; the
+                        #   payload under it is bit-identical to a miss
+                        self._finish(req, hit, results)
+                        served_ids.add(id(req))
+                        self.stats["cache_hits"] += 1
+                        m.counter("serve.cache_hits").inc()
+                        continue
+                    self.stats["cache_misses"] += 1
+                    m.counter("serve.cache_misses").inc()
+                    if key in leaders:            # coalesce onto leader
+                        followers.setdefault(key, []).append(req)
+                    else:
+                        leaders[key] = req
+                        to_dispatch.append(req)
             by_family: Dict[type, List[WorkloadRequest]] = {}
-            for req in wave:
+            for req in to_dispatch:
                 by_family.setdefault(type(req._bound[2]), []).append(req)
             dispatched: List[tuple] = []
             try:
@@ -303,12 +466,14 @@ class PredictionService:
                     m.counter("serve.sweeps").inc()
             except Exception as exc:
                 # the wave is already off the queue; stamp every request
-                # so callers holding the objects see the failure, then
-                # surface it (stats/metrics record the wave as failed)
+                # not already served from cache so callers holding the
+                # objects see the failure, then surface it.  Nothing from
+                # a failed wave is ever inserted into the cache.
                 err = {"status": "error", "error": str(exc),
                        "error_type": type(exc).__name__}
                 for req in wave:
-                    req.result = dict(err)
+                    if id(req) not in served_ids:
+                        req.result = dict(err)
                 self.stats["errors"] += 1
                 m.counter("serve.dispatch_failures").inc()
                 raise
@@ -319,16 +484,28 @@ class PredictionService:
                         self._degrade(out, req._fallback, kind="rank_guard")
                     elif req.breakdown:
                         self._attach_breakdown(req, out)
-                    req.result = out
-                    results[req.rid] = out
-                    if m.enabled and req._t_submit is not None:
-                        m.histogram("serve.request_latency_s").observe(
-                            time.perf_counter() - req._t_submit)
+                    if (cache is not None and req._ckey is not None
+                            and not out.get("degraded")):
+                        # inserts happen only here, after a successful
+                        # non-degraded dispatch: errors raised above and
+                        # degraded answers never enter the cache
+                        cache.put(req._ckey, out,
+                                  platform=req._bound[1].name)
+                    self._finish(req, out, results)
+                    for dup in (followers.get(req._ckey, ())
+                                if req._ckey is not None else ()):
+                        self._finish(dup, copy_payload(out), results)
+                        self.stats["coalesced"] += 1
+                        m.counter("serve.coalesced").inc()
             self.stats["batches"] += 1
             self.stats["scenarios"] += len(wave)
             if m.enabled:
                 m.counter("serve.batches").inc()
                 m.counter("serve.scenarios").inc(len(wave))
+                if cache is not None:
+                    m.gauge("serve.cache_entries").set(len(cache))
+                    m.gauge("serve.cache_occupancy").set(
+                        len(cache) / cache.max_entries)
         return results
 
     def predict_batch(self, requests: Sequence[WorkloadRequest], *,
@@ -379,6 +556,75 @@ class PredictionService:
             [WorkloadRequest(rid=0, workload=workload, platform=platform,
                              params=params, faults=faults,
                              timeout_s=timeout_s)])[0]
+
+    # --------------------------------------------------------- warm pool
+    def warm(self, workloads: Any = ("hpl",), platforms: Any = (), *,
+             count: int = 1, prime_cache: bool = False,
+             requests: Optional[Sequence[WorkloadRequest]] = None
+             ) -> Dict[str, Any]:
+        """Precompile the sweep buckets a (workload, platform) grid will
+        need, so the first real wave pays zero compiles.
+
+        ``workloads``/``platforms`` are names, specs, or instances (one
+        or a sequence); ``count`` replicates each cell so the warm
+        dispatch is padded to the same power-of-two lane count a real
+        wave of that size will use (the jit cache is keyed on the padded
+        batch shape — warm with the wave size you expect to serve).
+        Alternatively ``requests=`` warms from a representative traffic
+        sample: the sweep engine sees exactly the scenario/geometry mix
+        (and therefore the compile buckets) those requests will need —
+        breakdown/timeout stamps are dropped, only the sweep shapes
+        matter.  With ``prime_cache=True`` (and a cache attached) the
+        warm results are inserted too, so the first wave is all-hits,
+        not just all-compile-hits.
+
+        Compiles are measured via the §18 trace counters and recorded as
+        ``serve.warm_compiles`` / ``serve.warm_dispatches``; the report
+        dict carries ``compiles``/``dispatches``/``scenarios``.  A
+        second identical ``warm()`` reporting ``compiles == 0`` is the
+        warm-pool verification contract."""
+        from repro.core import fastsim
+        from repro.workloads import stepsim
+
+        def _aslist(x):
+            return list(x) if isinstance(x, (list, tuple)) else [x]
+
+        reqs: List[WorkloadRequest] = []
+        if requests is not None:
+            reqs = [WorkloadRequest(rid=-1 - i, workload=r.workload,
+                                    platform=r.platform,
+                                    params=dict(r.params), faults=r.faults,
+                                    regions=r.regions)
+                    for i, r in enumerate(requests)]
+        else:
+            for wl in _aslist(workloads):
+                for plat in _aslist(platforms):
+                    for i in range(max(1, int(count))):
+                        reqs.append(WorkloadRequest(rid=-1 - len(reqs),
+                                                    workload=wl,
+                                                    platform=plat))
+        for req in reqs:
+            self._resolve(req)
+        by_family: Dict[type, List[WorkloadRequest]] = {}
+        for req in reqs:
+            by_family.setdefault(type(req._bound[2]), []).append(req)
+        m = self.metrics
+        pre = fastsim.trace_count() + stepsim.trace_count()
+        for model_cls, group in by_family.items():
+            res = self._dispatch(model_cls, group)
+            if m.enabled:
+                m.counter("serve.warm_dispatches").inc()
+            if prime_cache and self.cache is not None:
+                for req, out in zip(group, res):
+                    key = self._cache_key(req)
+                    if key is not None:
+                        self.cache.put(key, dict(out),
+                                       platform=req._bound[1].name)
+        compiles = fastsim.trace_count() + stepsim.trace_count() - pre
+        if m.enabled and compiles:
+            m.counter("serve.warm_compiles").inc(compiles)
+        return {"compiles": compiles, "dispatches": len(by_family),
+                "scenarios": len(reqs)}
 
     # ------------------------------------------------------ observability
     def prometheus(self) -> str:
@@ -554,6 +800,21 @@ class HPLPredictionService:
                 "max_batch": self.max_batch, "stats": dict(self.stats)}
         base.update(meta)
         return manifest_line("serve_run", meta=base, metrics=self.metrics)
+
+
+def warm(workloads: Any = ("hpl",), platforms: Any = (), *,
+         count: int = 1, prime_cache: bool = False,
+         service: Optional[PredictionService] = None,
+         **service_kw) -> Dict[str, Any]:
+    """Module-level warm-pool entry point (``python -m repro.serve warm``
+    wraps this): precompile the sweep buckets for a (workload, platform)
+    grid on ``service`` — or a fresh ``PredictionService(**service_kw)``
+    — and return the warm report (see ``PredictionService.warm``)."""
+    svc = service if service is not None else PredictionService(**service_kw)
+    report = svc.warm(workloads, platforms, count=count,
+                      prime_cache=prime_cache)
+    report["service"] = type(svc).__name__
+    return report
 
 
 def predict_top500(csv_path, *, namespace: Optional[str] = None,

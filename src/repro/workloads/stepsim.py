@@ -33,7 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
 
-from repro.core.fastsim import _pad_pow2
+from repro.core.fastsim import _pad_pow2, _record_shard, _shard_lanes
 from repro.obs.metrics import RATIO_BUCKETS, get_global_metrics
 
 
@@ -161,9 +161,11 @@ def sweep_step(params_list: Sequence[StepParams]) -> List[Dict]:
     m = get_global_metrics()
     with enable_x64(True):
         fn = _compiled()
+        (stacked,), sharded = _shard_lanes(
+            len(lanes), _stack_step_params(prm_list, lanes))
         if m.enabled:
             pre, t0 = trace_count(), time.perf_counter()
-        out = np.asarray(fn(_stack_step_params(prm_list, lanes)))
+        out = np.asarray(fn(stacked))
         if m.enabled:
             # same taxonomy as fastsim._record_dispatch, one shared
             # "step" bucket (the step core is shape-monomorphic)
@@ -182,6 +184,7 @@ def sweep_step(params_list: Sequence[StepParams]) -> List[Dict]:
                 len(lanes) - len(prm_list))
             m.histogram("stepsim.sweep_occupancy", RATIO_BUCKETS).observe(
                 len(prm_list) / len(lanes))
+            _record_shard(m, sharded, prefix="stepsim")
     return [_result(p, float(t))
             for p, t in zip(prm_list, out[:len(prm_list)])]
 

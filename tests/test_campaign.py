@@ -263,6 +263,30 @@ def test_same_spec_gives_byte_equal_run_lines(accept_result):
         assert d1[k] == d2[k]
 
 
+def test_rerun_against_warm_cached_service_is_all_hits(accept_result):
+    from repro.serve import PredictionService
+    res, _ = accept_result
+    svc = PredictionService(cache=True)
+    spec = accept_spec()
+    first = run_campaign(spec, service=svc)
+    second = run_campaign(spec, service=svc)
+    d1 = first.summary["meta"]["dispatches"]
+    d2 = second.summary["meta"]["dispatches"]
+    grid = first.summary["meta"]["grid_runs"]
+    # cold pass: every grid cell is a miss (duplicate cells coalesce)
+    assert d1["cache_hits"] == 0 and d1["cache_misses"] == grid
+    # warm pass: all-hits — zero sweeps, zero model dispatches
+    assert d2["cache_hits"] == grid and d2["cache_misses"] == 0
+    assert d2["serve_sweeps"] == 0
+    assert d2["fastsim_dispatches"] == 0 == d2["stepsim_dispatches"]
+    # results are unchanged: byte-equal campaign_run lines, and equal
+    # to the plain uncached run's lines (the cached stamp is stripped)
+    warm_lines = [l for l in second.lines() if '"campaign_run"' in l]
+    cold_lines = [l for l in first.lines() if '"campaign_run"' in l]
+    base_lines = [l for l in res.lines() if '"campaign_run"' in l]
+    assert warm_lines == cold_lines == base_lines
+
+
 def test_strict_run_raises_on_bad_cell():
     # fail_stop has no closed-form fastsim mapping: resolution fails at
     # serve time (expand can't see it — faults aren't platform checks)
